@@ -1,0 +1,70 @@
+"""Wall-clock microbenchmarks of the REAL threaded runtime (JAX CPU ops
+release the GIL): hybrid vs history victim selection on an
+overlap-structured graph, and gang vs non-gang panel regions."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import ParallelSpec, TaskGraph, run_graph
+
+
+def overlap_graph(n_steps: int = 6, n_children: int = 8, gemm: int = 384,
+                  comm_s: float = 0.03) -> TaskGraph:
+    """Cholesky-shaped: per step, a comm task (sleep) on the critical path
+    and a flood of GEMM children that can hide it."""
+    g = TaskGraph("wall-overlap")
+    rng = np.random.default_rng(0)
+    mats = [np.asarray(rng.standard_normal((gemm, gemm)), np.float32)
+            for _ in range(2)]
+
+    def gemm_task(ctx):
+        return float(np.linalg.norm(mats[0] @ mats[1]))
+
+    def comm_task(ctx):
+        time.sleep(comm_s)
+
+    prev_comm = None
+    prev_join = None
+    for k in range(n_steps):
+        pdeps = [t for t in (prev_comm,) if t is not None]
+        panel = g.add(gemm_task, name=f"panel[{k}]", kind="panel", deps=pdeps)
+        comm = g.add(comm_task, name=f"bcast[{k}]", kind="comm", deps=[panel])
+        parent_deps = [comm] + ([prev_join] if prev_join is not None else [])
+        parent = g.add(lambda ctx: None, name=f"trail*[{k}]", deps=parent_deps)
+        children = [g.add(gemm_task, name=f"tr[{k}.{j}]", deps=[parent])
+                    for j in range(n_children)]
+        prev_join = g.add(lambda ctx: None, name=f"join[{k}]", deps=children)
+        prev_comm = comm
+    return g
+
+
+def bench(workers: int = 4, repeats: int = 3) -> List[dict]:
+    rows = []
+    for policy in ("history", "hybrid"):
+        times = []
+        for r in range(repeats):
+            g = overlap_graph()
+            t0 = time.perf_counter()
+            run_graph(g, workers, policy=policy, seed=r, timeout=120.0)
+            times.append(time.perf_counter() - t0)
+        best = min(times)
+        rows.append({
+            "bench": "wallclock_overlap", "policy": policy,
+            "workers": workers,
+            "best_s": round(best, 3),
+            "us_per_call": round(best * 1e6, 1),
+        })
+    return rows
+
+
+def main():
+    from .common import emit
+    emit(bench())
+
+
+if __name__ == "__main__":
+    main()

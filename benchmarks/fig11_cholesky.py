@@ -1,0 +1,49 @@
+"""Fig. 11 analogue: distributed Cholesky — hybrid victim selection vs
+history across sizes and rank counts, plus the per-worker Idle/Comm/Compute
+breakdown (Fig. 11d)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .common import CHOL_CONFIG, CHOL_MULTI, SIZES, build, emit, run
+
+
+def bench(seeds=(0, 1, 2)) -> List[dict]:
+    rows = []
+    for conf_name, conf in (("2rank", CHOL_CONFIG), ("4rank", CHOL_MULTI)):
+        for size in ("small", "large", "xl"):
+            nb = SIZES[size]
+            g = build("cholesky", nb, conf["ranks"])
+            res, traces = {}, {}
+            t0 = time.perf_counter()
+            for pol in ("history", "hybrid"):
+                trs = [run(g, conf["workers"], conf["ranks"], policy=pol, seed=s)
+                       for s in seeds]
+                res[pol] = sum(t.makespan for t in trs) / len(trs)
+                traces[pol] = trs[0]
+            gain = 100 * (res["history"] - res["hybrid"]) / res["history"]
+            row = {
+                "bench": "fig11", "config": conf_name, "size": size,
+                "history_ms": round(res["history"] * 1e3, 2),
+                "hybrid_ms": round(res["hybrid"] * 1e3, 2),
+                "hybrid_gain_pct": round(gain, 2),
+                "us_per_call": round((time.perf_counter() - t0) * 1e6 / (2 * len(seeds)), 1),
+            }
+            for pol in ("history", "hybrid"):
+                b = traces[pol].breakdown_fraction()
+                row[f"{pol}_idle"] = round(b.get("idle", 0), 4)
+                row[f"{pol}_comm"] = round(b.get("comm", 0), 4)
+                row[f"{pol}_compute"] = round(
+                    b.get("compute", 0) + b.get("lookahead", 0) + b.get("panel", 0), 4)
+            rows.append(row)
+    return rows
+
+
+def main():
+    emit(bench())
+
+
+if __name__ == "__main__":
+    main()

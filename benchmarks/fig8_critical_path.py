@@ -1,0 +1,43 @@
+"""Fig. 8 analogue: critical-path composition of LU/QR — how much of the
+execution is panel, communication, and other, under the baseline
+(oversubscribed, history) vs our runtime (gang, hybrid)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .common import LU_QR_CONFIG, SIZES, build, emit, run
+
+
+def bench(sizes=("small", "large")) -> List[dict]:
+    rows = []
+    for kernel in ("lu", "qr"):
+        conf = LU_QR_CONFIG
+        for size in sizes:
+            nb = SIZES[size]
+            g = build(kernel, nb, conf["ranks"])
+            t0 = time.perf_counter()
+            for label, mode, pol in (("llvm", "oversubscribe", "history"),
+                                     ("hclib", "gang", "hybrid")):
+                tr = run(g, conf["workers"], conf["ranks"], mode=mode, policy=pol)
+                b = tr.breakdown_fraction()
+                rows.append({
+                    "bench": "fig8", "kernel": kernel, "size": size,
+                    "runtime": label,
+                    "makespan_ms": round(tr.makespan * 1e3, 2),
+                    "panel_frac": round(b.get("panel", 0), 4),
+                    "comm_frac": round(b.get("comm", 0), 4),
+                    "compute_frac": round(b.get("compute", 0) + b.get("lookahead", 0), 4),
+                    "idle_frac": round(b.get("idle", 0) + b.get("barrier", 0), 4),
+                    "us_per_call": round((time.perf_counter() - t0) * 1e6, 1),
+                })
+    return rows
+
+
+def main():
+    emit(bench())
+
+
+if __name__ == "__main__":
+    main()

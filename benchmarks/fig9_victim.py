@@ -1,0 +1,44 @@
+"""Fig. 9 analogue: victim-selection policy sweep (history/random/hybrid) on
+LU, QR, Cholesky — the paper's claim: Cholesky is highly policy-sensitive
+(hybrid best), LU/QR barely move."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .common import CHOL_CONFIG, CHOL_MULTI, LU_QR_CONFIG, SIZES, build, emit, run
+
+
+def bench(sizes=("small", "large"), policies=("history", "random", "hybrid"),
+          seeds=(0, 1, 2)) -> List[dict]:
+    rows = []
+    for kernel in ("cholesky", "lu", "qr"):
+        conf = CHOL_CONFIG if kernel == "cholesky" else LU_QR_CONFIG
+        for size in sizes:
+            nb = SIZES[size]
+            g = build(kernel, nb, conf["ranks"])
+            base = None
+            for pol in policies:
+                t0 = time.perf_counter()
+                ms = [run(g, conf["workers"], conf["ranks"], policy=pol,
+                          seed=s).makespan for s in seeds]
+                mean = sum(ms) / len(ms)
+                if pol == "history":
+                    base = mean
+                rows.append({
+                    "bench": "fig9", "kernel": kernel, "size": size,
+                    "policy": pol,
+                    "makespan_ms": round(mean * 1e3, 2),
+                    "vs_history_pct": round(100 * (base - mean) / base, 2),
+                    "us_per_call": round((time.perf_counter() - t0) * 1e6 / len(seeds), 1),
+                })
+    return rows
+
+
+def main():
+    emit(bench())
+
+
+if __name__ == "__main__":
+    main()

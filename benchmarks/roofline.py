@@ -1,0 +1,142 @@
+"""Roofline terms per (arch x shape x mesh) cell from the dry-run artifacts.
+
+    compute term    = FLOPs / (chips x 197e12)          [bf16 peak/chip]
+    memory term     = HBM bytes / (chips x 819e9)
+    collective term = collective bytes / (chips x ~50e9 per link)
+
+FLOPs use the analytic model (XLA's cost_analysis counts while bodies once —
+see launch/hlo_analysis; the HLO-derived, trip-count-corrected dot FLOPs are
+reported alongside as `hlo_dot_flops` for the useful-compute ratio).
+Collective bytes are trip-count-corrected from the compiled HLO (per
+participant) with per-kind ICI factors (all-reduce moves ~2x its payload).
+
+All terms are per-device (the SPMD program is per-device); the bottleneck is
+the largest term.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link (~45 GB/s usable per direction)
+
+# effective wire multiplier per collective kind (ring algorithms)
+_KIND_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def analytic_flops(rec: Dict) -> float:
+    """Per-device useful FLOPs for the cell (6ND train / 2ND inference +
+    attention terms), from the config metadata stored in the record."""
+    meta = rec["cell_meta"]
+    n_active = rec["params_active"]
+    seq, batch = meta["seq_len"], meta["global_batch"]
+    kind = meta["kind"]
+    n_dev = rec["n_devices"]
+    L = meta["n_layers"]
+    H, hd = meta.get("n_heads", 0), meta.get("head_dim", 0)
+    window = meta.get("window", 0) or 0
+    lg = meta.get("local_global_ratio", 0)
+
+    def attn_flops_tok(ctx_len: int) -> float:
+        # per token per layer: 2 matmuls of (ctx x hd) per head, causal ~ /2
+        if not H:
+            return 0.0
+        full = 4.0 * H * hd * ctx_len * 0.5
+        if lg and window:
+            # (lg local + 1 global) pattern
+            local = 4.0 * H * hd * min(window, ctx_len) * 0.5
+            return (lg * local + full) / (lg + 1)
+        return full
+
+    if kind == "train":
+        tokens = seq * batch
+        f = 6.0 * n_active * tokens + 3.0 * L * attn_flops_tok(seq) * tokens
+    elif kind == "prefill":
+        tokens = seq * batch
+        f = 2.0 * n_active * tokens + L * attn_flops_tok(seq) * tokens
+    else:  # decode: one token, full-context attention (no causal halving)
+        tokens = batch
+        f = 2.0 * n_active * tokens
+        if H:
+            att = 4.0 * H * hd * seq
+            if lg and window:
+                att = (lg * 4.0 * H * hd * min(window, seq) + att) / (lg + 1)
+            f += L * att * tokens
+    return f / n_dev
+
+
+def analytic_hbm_bytes(rec: Dict) -> float:
+    """Per-device HBM traffic estimate: params read (sharded) x passes +
+    remat re-read + cache read/write for decode + activations once."""
+    meta = rec["cell_meta"]
+    kind = meta["kind"]
+    n_dev = rec["n_devices"]
+    param_bytes = rec["params"] * 2 / n_dev          # bf16, fully sharded
+    act = meta["seq_len"] * meta["global_batch"] * meta["d_model"] * 2 / n_dev
+    if kind == "train":
+        # fwd + remat-fwd + bwd param reads + optimizer f32 m/v read+write
+        return 3 * param_bytes * max(1, rec.get("microbatches", 1)) \
+            + 3 * (rec["params"] * 4 / n_dev) + 6 * act
+    if kind == "prefill":
+        return param_bytes + 4 * act
+    # decode: params + full KV/state cache read
+    cache = rec.get("cache_bytes_per_dev", 0.0)
+    return param_bytes + cache + 4 * meta["global_batch"] * meta["d_model"] * 2 / n_dev
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = rec["n_devices"]
+    flops = analytic_flops(rec)
+    compute_t = flops / PEAK_FLOPS
+    hbm = analytic_hbm_bytes(rec)
+    memory_t = hbm / HBM_BW
+    coll = rec.get("collectives_corrected") or rec["collectives"]
+    coll_t = 0.0
+    for kind, factor in _KIND_FACTOR.items():
+        coll_t += coll.get(kind, {}).get("bytes", 0.0) * factor / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    bottleneck = max(terms, key=terms.get)
+    total = max(terms.values())
+    model_flops = 6.0 * rec["params_active"] * rec["cell_meta"]["seq_len"] * \
+        rec["cell_meta"]["global_batch"] / n_dev
+    if rec["cell_meta"]["kind"] != "train":
+        model_flops /= 3.0
+    hlo_flops = rec.get("hlo_dot_flops", rec.get("flops", 0.0))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": f"{compute_t:.2e}",
+        "memory_s": f"{memory_t:.2e}",
+        "collective_s": f"{coll_t:.2e}",
+        "bottleneck": bottleneck,
+        "roofline_frac": round(compute_t / total, 3) if total else 0.0,
+        "useful_ratio": round(min(10.0, flops / hlo_flops), 3) if hlo_flops else "n/a",
+        "temp_gib": round(rec["memory"].get("temp_size_in_bytes", 0) / 2 ** 30, 2),
+        "fits_16g": rec["memory"].get("temp_size_in_bytes", 0) < 16 * 2 ** 30,
+    }
+
+
+def main(out_dir: str = "results/dryrun"):
+    rows: List[Dict] = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(f))
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    if not rows:
+        print("bench,roofline,SKIPPED (no dry-run artifacts; run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return
+    from .common import emit
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

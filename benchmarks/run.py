@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+roofline report.  Prints CSV blocks."""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import (bench_runtime, fig7_lu_qr, fig8_critical_path, fig9_victim,
+                   fig11_cholesky, roofline)
+
+    print("# fig7: LU/QR gang-scheduling vs oversubscription (paper Fig. 7)")
+    fig7_lu_qr.main()
+    print()
+    print("# fig8: critical-path composition (paper Fig. 8)")
+    fig8_critical_path.main()
+    print()
+    print("# fig9: victim-selection policy sweep (paper Fig. 9)")
+    fig9_victim.main()
+    print()
+    print("# fig11: distributed Cholesky + idle breakdown (paper Fig. 11)")
+    fig11_cholesky.main()
+    print()
+    print("# wall-clock: threaded runtime overlap (real GIL-releasing ops)")
+    bench_runtime.main()
+    print()
+    print("# roofline: dry-run derived terms (EXPERIMENTS.md section Roofline)")
+    roofline.main()
+    print()
+    print(f"# total bench time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

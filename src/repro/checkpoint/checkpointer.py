@@ -1,0 +1,140 @@
+"""Sharded, async, elastic checkpointing.
+
+* each leaf is saved as a ``.npy`` under a step directory plus a JSON
+  manifest (tree structure, shapes, dtypes, step, data-pipeline state);
+* writes go to ``<step>.tmp`` then atomically rename — a preempted save
+  never corrupts the latest checkpoint (fault tolerance);
+* ``save_async`` runs serialization on a background thread (device->host
+  copy is the only sync part), overlapping the next train steps;
+* restore is *elastic*: arrays are loaded by tree path and re-sharded onto
+  whatever mesh the restoring job uses (different device count / topology),
+  so jobs can restart on a resized slice.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=()) -> Dict[Tuple[str, ...], Any]:
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out.update(_flatten(v, prefix + (str(k),)))
+        return out
+    return {prefix: tree}
+
+
+def _unflatten(flat: Dict[Tuple[str, ...], Any]):
+    root: Dict = {}
+    for path, v in flat.items():
+        node = root
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = v
+    return root
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> str:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        """Device->host copy happens here; file IO on a background thread."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            self._write(step, host_tree, extra or {})
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree, extra: Dict) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra, "leaves": []}
+        for i, (path, arr) in enumerate(sorted(flat.items())):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append({
+                "path": list(path), "file": fname,
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        """Load a checkpoint; if ``shardings`` (a pytree of NamedSharding /
+        None matching the saved tree) is given, place each leaf accordingly —
+        this is the elastic path (works for any mesh shape)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for leaf in manifest["leaves"]:
+            arr = np.load(os.path.join(d, leaf["file"]))
+            flat[tuple(leaf["path"])] = arr
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+
+            def place(path, arr):
+                sh = flat_sh.get(path)
+                if sh is None:
+                    return jnp.asarray(arr)
+                return jax.device_put(arr, sh)
+            tree = _unflatten({p: place(p, a) for p, a in _flatten(tree).items()})
+        return tree, manifest

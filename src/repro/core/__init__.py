@@ -1,0 +1,51 @@
+"""Core: the paper's task-graph scheduling extensions.
+
+Public API:
+
+* :class:`TaskGraph` / :class:`Task` / :class:`ParallelSpec` — task graphs
+  with nested data-parallel regions.
+* :class:`Runtime` / :func:`run_graph` — the threaded gang-scheduling +
+  work-stealing runtime (Algorithms 1 & 2, faithful reproduction).
+* :class:`Simulator` / :func:`simulate` — deterministic discrete-event
+  simulator of the same scheduler (oversubscription / gang / naive-ULT
+  modes) for controlled experiments at scale.
+* :class:`ListScheduler` / :class:`StaticSchedule` — frozen schedules for
+  the SPMD/TPU execution path (wave decomposition, collective total order).
+* victim policies: ``history`` / ``random`` / ``hybrid`` (Algorithm 2).
+"""
+
+from .gang import GangState, is_eligible_to_sched
+from .policies import HistoryPolicy, HybridPolicy, RandomPolicy, make_policy
+from .runtime import Runtime, run_graph
+from .simulator import DeadlockError, Simulator, simulate
+from .static_schedule import (
+    ListScheduler,
+    StaticSchedule,
+    issue_offsets_from_schedule,
+    microbatch_overlap_graph,
+)
+from .taskgraph import ParallelSpec, Task, TaskContext, TaskGraph
+from .tracing import Trace
+
+__all__ = [
+    "DeadlockError",
+    "GangState",
+    "HistoryPolicy",
+    "HybridPolicy",
+    "ListScheduler",
+    "ParallelSpec",
+    "RandomPolicy",
+    "Runtime",
+    "Simulator",
+    "StaticSchedule",
+    "Task",
+    "TaskContext",
+    "TaskGraph",
+    "Trace",
+    "is_eligible_to_sched",
+    "issue_offsets_from_schedule",
+    "make_policy",
+    "microbatch_overlap_graph",
+    "run_graph",
+    "simulate",
+]

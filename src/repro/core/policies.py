@@ -1,0 +1,134 @@
+"""Victim-selection policies (paper Algorithm 2 and baselines).
+
+The paper's hybrid policy keeps, per worker, a fixed-size circular *history
+array* ``prev_victim_id`` and a cursor ``history_idx``:
+
+* ``select_victim``: if the entry under the cursor holds a valid victim id,
+  steal from it (history); otherwise pick a uniformly random victim.
+* after a **successful** steal the entry is set to the victim and the cursor
+  advances — the next attempt lands on a (typically empty ⇒ random) slot, so
+  a success is followed by a random probe;
+* after a **failed** steal the entry is invalidated and the cursor moves
+  back — landing on the slot of the latest success, so failures retry the
+  last productive victim.
+
+The alternation is what creates communication/computation overlap across
+sibling subtrees (paper Fig. 2) while the retreat-on-failure preserves
+locality.  ``HistoryPolicy`` is the classical steal-from-last-success
+baseline (what LLVM OMP effectively does); ``RandomPolicy`` is the pure
+random baseline.  All policies are deterministic given their ``seed`` so the
+simulator and the benchmarks are reproducible.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional
+
+
+class VictimPolicy:
+    """Per-worker victim selection state machine."""
+
+    name = "base"
+
+    def __init__(self, worker_id: int, n_workers: int, seed: int = 0):
+        self.worker_id = worker_id
+        self.n_workers = n_workers
+        self.rng = random.Random((seed << 20) ^ (worker_id * 0x9E3779B1))
+
+    def _rand_victim(self) -> int:
+        """Random victim excluding self (a worker never steals from itself)."""
+        if self.n_workers <= 1:
+            return self.worker_id
+        v = self.rng.randrange(self.n_workers - 1)
+        return v if v < self.worker_id else v + 1
+
+    def select(self) -> int:
+        raise NotImplementedError
+
+    def record(self, victim: int, success: bool) -> None:
+        raise NotImplementedError
+
+    def clone_for(self, worker_id: int) -> "VictimPolicy":
+        return type(self)(worker_id, self.n_workers, self._seed)
+
+
+class RandomPolicy(VictimPolicy):
+    name = "random"
+
+    def __init__(self, worker_id: int, n_workers: int, seed: int = 0):
+        super().__init__(worker_id, n_workers, seed)
+        self._seed = seed
+
+    def select(self) -> int:
+        return self._rand_victim()
+
+    def record(self, victim: int, success: bool) -> None:
+        pass
+
+
+class HistoryPolicy(VictimPolicy):
+    """Classical history heuristic: keep stealing from the last successful
+    victim until a steal from it fails, then probe randomly."""
+
+    name = "history"
+
+    def __init__(self, worker_id: int, n_workers: int, seed: int = 0):
+        super().__init__(worker_id, n_workers, seed)
+        self._seed = seed
+        self.last_victim: int = -1
+
+    def select(self) -> int:
+        if self.last_victim >= 0:
+            return self.last_victim
+        return self._rand_victim()
+
+    def record(self, victim: int, success: bool) -> None:
+        self.last_victim = victim if success else -1
+
+
+class HybridPolicy(VictimPolicy):
+    """Paper Algorithm 2 — alternating history / random within a fixed
+    circular window."""
+
+    name = "hybrid"
+
+    def __init__(self, worker_id: int, n_workers: int, seed: int = 0, window: int = 8):
+        super().__init__(worker_id, n_workers, seed)
+        self._seed = seed
+        self.window = window
+        self.prev_victim_id: List[int] = [-1] * window
+        self.history_idx = 0
+
+    def select(self) -> int:
+        cur = self.prev_victim_id[self.history_idx % self.window]
+        if cur >= 0:
+            return cur
+        return self._rand_victim()
+
+    def record(self, victim: int, success: bool) -> None:
+        cur_idx = self.history_idx % self.window
+        if success:
+            self.prev_victim_id[cur_idx] = victim
+            self.history_idx = (self.history_idx + 1) % self.window
+        else:
+            self.prev_victim_id[cur_idx] = -1
+            self.history_idx = (self.history_idx - 1) % self.window
+
+    def clone_for(self, worker_id: int) -> "HybridPolicy":
+        return HybridPolicy(worker_id, self.n_workers, self._seed, self.window)
+
+
+POLICIES = {
+    "random": RandomPolicy,
+    "history": HistoryPolicy,
+    "hybrid": HybridPolicy,
+}
+
+
+def make_policy(name: str, worker_id: int, n_workers: int, seed: int = 0) -> VictimPolicy:
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown victim policy {name!r}; options: {sorted(POLICIES)}")
+    return cls(worker_id, n_workers, seed)

@@ -1,0 +1,481 @@
+"""Multi-threaded work-stealing + gang-scheduling runtime (faithful repro).
+
+Executes a :class:`~repro.core.taskgraph.TaskGraph` whose tasks are real
+Python/JAX callables on a pool of pinned worker threads.  JAX CPU ops release
+the GIL, so tile GEMMs genuinely run in parallel and communication thunks
+(sleeps / device transfers) genuinely overlap compute — the wall-clock
+speedups of the hybrid victim policy are measurable, not simulated.
+
+Faithfulness to the paper:
+
+* per-worker work-stealing deques; ready tasks are pushed to the queue of
+  the worker that resolved their last dependency (paper §2.1);
+* Algorithm 2 victim selection (``history`` / ``random`` / ``hybrid``);
+* Algorithm 1 gang scheduling: parallel regions spawned by tasks are
+  gang-scheduled onto reserved workers under the fork lock with a monotonic
+  gang id; gang ULTs are stealable subject to ``is_eligible_to_sched``;
+* region barriers: gang regions may use *blocking* barriers safely (all
+  members are guaranteed distinct workers); at the *join* barrier a gang ULT
+  steals eligible work instead of idling (the paper's scheduling point);
+* non-gang regions with blocking barriers reproduce the Fig. 1 deadlock —
+  the runtime detects the all-workers-blocked state and raises
+  :class:`DeadlockError` instead of hanging.
+
+Python threads cannot switch ULT stacks, so *internal* barriers of a gang
+region block the kernel thread (safe under gang reservation) instead of
+being cooperative scheduling points — the one deviation from HClib,
+documented in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from .gang import GangState, is_eligible_to_sched
+from .policies import make_policy
+from .simulator import DeadlockError
+from .taskgraph import ParallelSpec, Task, TaskContext, TaskGraph
+from .tracing import Trace
+
+
+class _Region:
+    """A running parallel region (one gang)."""
+
+    def __init__(self, rid: int, gang_id: int, nest_level: int, spec: ParallelSpec,
+                 runtime: "Runtime", spawn_task: Optional[Task]):
+        self.rid = rid
+        self.gang_id = gang_id
+        self.nest_level = nest_level
+        self.spec = spec
+        self.runtime = runtime
+        self.spawn_task = spawn_task
+        self.lock = threading.Lock()
+        self.cv = threading.Condition(self.lock)
+        self.barrier_round = 0
+        self.arrived = 0
+        self.done = 0
+        self.results: List[Any] = [None] * spec.n_threads
+
+    # -- the custom in-region barrier (paper: blocking sync inside tasks) ---
+    def barrier(self) -> None:
+        rt = self.runtime
+        with self.cv:
+            my_round = self.barrier_round
+            self.arrived += 1
+            if self.arrived == self.spec.n_threads:
+                self.arrived = 0
+                self.barrier_round += 1
+                self.cv.notify_all()
+                return
+            rt._enter_blocked()
+            try:
+                while self.barrier_round == my_round:
+                    if rt._shutdown or rt._deadlock or rt._failure:
+                        raise DeadlockError(rt._deadlock or "runtime aborted during barrier")
+                    if not self.cv.wait(timeout=rt.block_poll):
+                        rt._check_deadlock()
+            finally:
+                rt._exit_blocked()
+
+    def thread_done(self, tid: int, result: Any) -> bool:
+        with self.cv:
+            self.results[tid] = result
+            self.done += 1
+            finished = self.done == self.spec.n_threads
+            if finished:
+                self.cv.notify_all()
+            return finished
+
+    @property
+    def finished(self) -> bool:
+        return self.done == self.spec.n_threads
+
+
+class _GangULT:
+    __slots__ = ("region", "thread_num")
+
+    def __init__(self, region: _Region, thread_num: int):
+        self.region = region
+        self.thread_num = thread_num
+
+    @property
+    def gang_id(self) -> int:
+        return self.region.gang_id
+
+    @property
+    def nest_level(self) -> int:
+        return self.region.nest_level
+
+
+class _WorkerState(threading.local):
+    pass
+
+
+class Runtime:
+    """The integrated runtime (HClib-OMP analogue)."""
+
+    def __init__(
+        self,
+        n_workers: int,
+        *,
+        policy: str = "hybrid",
+        gang_default: bool = True,
+        seed: int = 0,
+        steal_backoff: float = 20e-6,
+        block_poll: float = 0.05,
+        trace: bool = False,
+    ):
+        self.n_workers = n_workers
+        self.policy_name = policy
+        self.gang_default = gang_default
+        self.seed = seed
+        self.steal_backoff = steal_backoff
+        self.block_poll = block_poll
+        self.trace_enabled = trace
+        self.trace = Trace(n_workers)
+
+        self._fork_lock = threading.Lock()          # the paper's fork-phase lock
+        self.gang_state = GangState(n_workers)
+        self._region_ids = itertools.count()
+
+        self._locals: List[Deque[Task]] = [deque() for _ in range(n_workers)]
+        self._local_locks = [threading.Lock() for _ in range(n_workers)]
+        self._gang_deqs: List[Deque[_GangULT]] = [deque() for _ in range(n_workers)]
+        self._gang_locks = [threading.Lock() for _ in range(n_workers)]
+        self._policies = [make_policy(policy, w, n_workers, seed) for w in range(n_workers)]
+
+        # worker context stacks: list of (gang_id, nest_level)
+        self._contexts: List[List[Tuple[int, int]]] = [[] for _ in range(n_workers)]
+
+        self._results: Dict[int, Any] = {}
+        self._results_lock = threading.Lock()
+        self._graph: Optional[TaskGraph] = None
+        self._indeg: List[int] = []
+        self._indeg_lock = threading.Lock()
+        self._remaining = 0
+        self._done_cv = threading.Condition()
+
+        self._blocked_count = 0
+        self._blocked_lock = threading.Lock()
+        self._shutdown = False
+        self._deadlock: Optional[str] = None
+        self._failure: Optional[BaseException] = None
+
+        self._threads: List[threading.Thread] = []
+        self._tls = _WorkerState()
+        self._started = False
+        self._work_available = threading.Condition()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for w in range(self.n_workers):
+            th = threading.Thread(target=self._worker_main, args=(w,), daemon=True,
+                                  name=f"repro-worker-{w}")
+            self._threads.append(th)
+            th.start()
+
+    def shutdown(self) -> None:
+        self._shutdown = True
+        with self._work_available:
+            self._work_available.notify_all()
+        for th in self._threads:
+            th.join(timeout=5.0)
+        self._threads.clear()
+        self._started = False
+        self._shutdown = False
+
+    def __enter__(self) -> "Runtime":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------------
+    # graph execution
+    def run(self, graph: TaskGraph, timeout: float = 300.0) -> Dict[int, Any]:
+        """Execute the graph; returns {tid: result}.  Raises DeadlockError if
+        the Fig. 1 state is reached, or re-raises the first task failure."""
+        graph.validate()
+        if not self._started:
+            self.start()
+        self._graph = graph
+        self._indeg = graph.indegrees()
+        self._results = {}
+        self._deadlock = None
+        self._failure = None
+        with self._done_cv:
+            self._remaining = len(graph)
+        # master thread (worker 0's queue) receives the roots
+        for t in graph.roots():
+            self._push_local(0, t)
+        self._notify_work()
+
+        deadline = time.monotonic() + timeout
+        with self._done_cv:
+            while self._remaining > 0:
+                if self._deadlock:
+                    raise DeadlockError(self._deadlock)
+                if self._failure:
+                    raise self._failure
+                if not self._done_cv.wait(timeout=0.05):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"graph {graph.name!r} did not finish within {timeout}s "
+                            f"({self._remaining} tasks left)")
+        if self._failure:
+            raise self._failure
+        return dict(self._results)
+
+    # ------------------------------------------------------------------
+    # queues
+    def _push_local(self, w: int, task: Task) -> None:
+        with self._local_locks[w]:
+            self._locals[w].append(task)
+
+    def _pop_local(self, w: int) -> Optional[Task]:
+        with self._local_locks[w]:
+            dq = self._locals[w]
+            if not dq:
+                return None
+            # priority-aware LIFO pop (bounded scan, paper's priority clause)
+            best_i, best_p = len(dq) - 1, dq[-1].priority
+            for i in range(len(dq) - 1, max(-1, len(dq) - 9), -1):
+                if dq[i].priority > best_p:
+                    best_i, best_p = i, dq[i].priority
+            t = dq[best_i]
+            del dq[best_i]
+            return t
+
+    def _steal_local(self, victim: int) -> Optional[Task]:
+        with self._local_locks[victim]:
+            dq = self._locals[victim]
+            return dq.popleft() if dq else None
+
+    def _pop_gang(self, thief: int, victim: int) -> Optional[_GangULT]:
+        ctx = self._contexts[thief]
+        cur_gang, cur_nest = (ctx[-1] if ctx else (-1, 0))
+        with self._gang_locks[victim]:
+            dq = self._gang_deqs[victim]
+            if not dq:
+                return None
+            head = dq[0]
+            if is_eligible_to_sched(head.gang_id, head.nest_level, cur_gang, cur_nest):
+                return dq.popleft()
+            return None
+
+    def _notify_work(self) -> None:
+        with self._work_available:
+            self._work_available.notify_all()
+
+    # ------------------------------------------------------------------
+    # worker loop
+    def _worker_main(self, w: int) -> None:
+        self._tls.wid = w
+        while not self._shutdown:
+            progressed = self._schedule_once(w)
+            if not progressed:
+                with self._work_available:
+                    self._work_available.wait(timeout=self.steal_backoff * 50)
+
+    def _schedule_once(self, w: int, eligible_only: bool = True) -> bool:
+        """One scheduling point: gang deque > local deque > steal.  Returns
+        True if a unit of work was executed."""
+        if self._failure is not None or self._deadlock is not None:
+            return False
+        ult = self._pop_gang(w, w)
+        if ult is not None:
+            self._run_gang_ult(w, ult)
+            return True
+        task = self._pop_local(w)
+        if task is not None:
+            self._run_task(w, task)
+            return True
+        # work stealing (Algorithm 2 policy)
+        pol = self._policies[w]
+        victim = pol.select()
+        got: Any = None
+        if victim != w:
+            got = self._pop_gang(w, victim)
+            if got is None:
+                got = self._steal_local(victim)
+        pol.record(victim, got is not None)
+        if got is None:
+            return False
+        if isinstance(got, _GangULT):
+            self._run_gang_ult(w, got)
+        else:
+            self._run_task(w, got)
+        return True
+
+    # ------------------------------------------------------------------
+    # task execution
+    def _run_task(self, w: int, task: Task) -> None:
+        t0 = time.perf_counter()
+        ctx = TaskContext(self._graph, task, self._results, runtime=self)
+        ctx.worker_id = w  # type: ignore[attr-defined]
+        try:
+            result = task.fn(ctx) if task.fn is not None else None
+        except BaseException as e:  # noqa: BLE001 - propagate to run()
+            self._failure = e
+            with self._done_cv:
+                self._done_cv.notify_all()
+            return
+        t1 = time.perf_counter()
+        if self.trace_enabled:
+            self.trace.record(w, t0, t1, task.kind, task.name)
+        with self._results_lock:
+            self._results[task.tid] = result
+        self._complete(w, task)
+
+    def _complete(self, w: int, task: Task) -> None:
+        newly_ready: List[Task] = []
+        with self._indeg_lock:
+            for s in self._graph.successors(task):
+                self._indeg[s.tid] -= 1
+                if self._indeg[s.tid] == 0:
+                    newly_ready.append(s)
+        for s in newly_ready:
+            self._push_local(w, s)
+        if newly_ready:
+            self._notify_work()
+        with self._done_cv:
+            self._remaining -= 1
+            if self._remaining <= 0:
+                self._done_cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # parallel regions (called from task bodies via ctx.parallel)
+    def parallel(
+        self,
+        n_threads: int,
+        body: Callable[[int, "_Region"], Any],
+        *,
+        gang: Optional[bool] = None,
+        spawn_ctx: Optional[TaskContext] = None,
+    ) -> List[Any]:
+        """Fork a parallel region of ``n_threads`` ULTs running
+        ``body(thread_num, region)``; join and return per-thread results.
+        ``region.barrier()`` is the blocking in-region barrier.
+
+        Gang regions (default) are scheduled per Algorithm 1.  Non-gang
+        regions push all ULTs to the calling worker's queue — combined with
+        blocking barriers this reproduces the Fig. 1 deadlock, which the
+        runtime detects."""
+        w = getattr(self._tls, "wid", 0)
+        use_gang = self.gang_default if gang is None else gang
+        if use_gang and n_threads > self.n_workers:
+            # Blocking synchronization requires every gang member on a
+            # distinct kernel thread (no ULT stack switching in Python) —
+            # same constraint OpenMP has for its thread teams.
+            raise ValueError(
+                f"gang region requests {n_threads} ULTs but only "
+                f"{self.n_workers} workers exist; blocking barriers would deadlock")
+        ctx_stack = self._contexts[w]
+        nest_level = (ctx_stack[-1][1] if ctx_stack else 0) + 1
+        spec = ParallelSpec(n_threads=n_threads, body=body, gang=use_gang)
+
+        with self._fork_lock:   # the paper's serialized fork phase
+            gang_id = self.gang_state.next_gang_id() if use_gang else -1
+            region = _Region(next(self._region_ids), gang_id, nest_level, spec, self,
+                             spawn_task=None)
+            if use_gang:
+                reserved = self.gang_state.get_workers(w, n_threads)
+                self.gang_state.account_gang([reserved[i % len(reserved)] for i in range(n_threads)])
+                for i in range(n_threads):
+                    target = reserved[i % len(reserved)]
+                    with self._gang_locks[target]:
+                        self._gang_deqs[target].append(_GangULT(region, i))
+            else:
+                for i in range(n_threads):
+                    with self._gang_locks[w]:
+                        self._gang_deqs[w].append(_GangULT(region, i))
+        self._notify_work()
+
+        # join: the spawning worker helps out at this scheduling point —
+        # paper: gang ULTs at a join barrier steal (eligible) work.
+        while not region.finished:
+            if self._shutdown or self._deadlock or self._failure:
+                raise DeadlockError(self._deadlock or "runtime aborted during join")
+            progressed = self._schedule_once(w)
+            if not progressed and not region.finished:
+                # join-waiters retry stealing, so they are NOT counted as
+                # hard-blocked (only blocking barriers are) — but they do
+                # poll the detector for barrier deadlocks elsewhere.
+                with region.cv:
+                    if not region.finished:
+                        if not region.cv.wait(timeout=self.block_poll):
+                            self._check_deadlock()
+        return list(region.results)
+
+    def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
+        region = ult.region
+        self._contexts[w].append((region.gang_id, region.nest_level))
+        t0 = time.perf_counter()
+        try:
+            result = region.spec.body(ult.thread_num, region)
+        except BaseException as e:  # noqa: BLE001
+            self._failure = e
+            with self._done_cv:
+                self._done_cv.notify_all()
+            return
+        finally:
+            self._contexts[w].pop()
+            if region.gang_id >= 0:
+                with self._fork_lock:
+                    self.gang_state.release_gang_thread(w)
+        t1 = time.perf_counter()
+        if self.trace_enabled:
+            self.trace.record(w, t0, t1, "panel", f"r{region.rid}.t{ult.thread_num}")
+        region.thread_done(ult.thread_num, result)
+
+    # ------------------------------------------------------------------
+    # deadlock detection: all workers blocked on barriers/joins while work
+    # remains that only they could run
+    def _enter_blocked(self) -> None:
+        with self._blocked_lock:
+            self._blocked_count += 1
+
+    def _exit_blocked(self) -> None:
+        with self._blocked_lock:
+            self._blocked_count -= 1
+
+    def _check_deadlock(self) -> None:
+        """The Fig. 1 state: every worker is stuck inside a *blocking*
+        barrier (kernel-thread semantics — cannot schedule anything) while
+        the ULTs that would satisfy those barriers sit starved in queues."""
+        with self._blocked_lock:
+            blocked = self._blocked_count
+        if blocked < self.n_workers:
+            return
+        queued = sum(len(d) for d in self._gang_deqs) + sum(len(d) for d in self._locals)
+        msg = (f"deadlock: all {blocked} workers blocked at blocking barriers; "
+               f"{queued} ULT(s)/task(s) starved")
+        self._deadlock = msg
+        with self._done_cv:
+            self._done_cv.notify_all()
+        raise DeadlockError(msg)
+
+
+def run_graph(
+    graph: TaskGraph,
+    n_workers: int,
+    *,
+    policy: str = "hybrid",
+    gang_default: bool = True,
+    seed: int = 0,
+    trace: bool = False,
+    timeout: float = 300.0,
+) -> Dict[int, Any]:
+    """Convenience: run a graph on a fresh runtime and shut it down."""
+    rt = Runtime(n_workers, policy=policy, gang_default=gang_default, seed=seed, trace=trace)
+    with rt:
+        return rt.run(graph, timeout=timeout)

@@ -1,0 +1,214 @@
+"""Task-graph representation.
+
+A :class:`TaskGraph` is a DAG of :class:`Task` nodes.  Tasks carry
+
+* an optional callable ``fn(ctx)`` executed by the runtime (``ctx`` is a
+  :class:`TaskContext` giving access to predecessor results and to the
+  runtime's parallel-region primitives),
+* an analytical ``cost`` (seconds) used by the discrete-event simulator and
+  the static list scheduler,
+* a ``kind`` tag (``compute`` / ``comm`` / ``panel`` / ...) used by cost
+  models and by the critical-path breakdown figures,
+* an optional ``parallel`` spec describing a nested data-parallel region the
+  task spawns (the gang-scheduling target of the paper).
+
+Dependencies are explicit (OpenMP ``depend``-style, resolved by the runtime)
+— the graph is static; readiness is dynamic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class ParallelSpec:
+    """A nested data-parallel region spawned by a task.
+
+    ``n_threads`` ULTs run ``body(tid, ctx)``.  ``blocking`` marks regions
+    whose internal synchronization is *blocking* (the paper's Fig. 1 hazard:
+    a custom library barrier that does not yield to the scheduler).  ``gang``
+    requests gang scheduling for this region (the paper's
+    ``ompx_set_gang_sched`` scope); ``None`` defers to the runtime default.
+    ``cost_per_thread`` is the per-ULT cost for the simulator; ``n_barriers``
+    is how many internal barrier rounds the region performs.
+    """
+
+    n_threads: int
+    body: Optional[Callable[[int, "TaskContext"], Any]] = None
+    blocking: bool = True
+    gang: Optional[bool] = None
+    cost_per_thread: float = 0.0
+    n_barriers: int = 1
+
+
+@dataclasses.dataclass
+class Task:
+    tid: int
+    name: str
+    fn: Optional[Callable[["TaskContext"], Any]] = None
+    deps: Tuple[int, ...] = ()
+    kind: str = "compute"
+    cost: float = 1.0
+    priority: int = 0
+    parallel: Optional[ParallelSpec] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __hash__(self) -> int:  # identity by tid within a graph
+        return hash(self.tid)
+
+
+class TaskContext:
+    """Handed to task bodies at execution time.
+
+    Provides predecessor results (``ctx[dep_task]`` / ``ctx.result(tid)``)
+    and, when run under the threaded runtime, the parallel-region primitives
+    (``ctx.parallel`` / ``ctx.barrier``) used by gang-scheduled regions.
+    """
+
+    def __init__(self, graph: "TaskGraph", task: Task, results: Dict[int, Any], runtime: Any = None):
+        self.graph = graph
+        self.task = task
+        self._results = results
+        self.runtime = runtime
+
+    def result(self, tid: int) -> Any:
+        return self._results[tid]
+
+    def parallel(self, n_threads: int, body, *, gang=None):
+        """Fork/join a nested parallel region (delegates to the runtime;
+        gang-scheduled by default — the paper's `ompx_set_gang_sched`)."""
+        if self.runtime is None:
+            # degenerate serial execution (no runtime): run inline
+            class _SerialRegion:
+                def barrier(self_inner):
+                    pass
+            region = _SerialRegion()
+            return [body(i, region) for i in range(n_threads)]
+        return self.runtime.parallel(n_threads, body, gang=gang, spawn_ctx=self)
+
+    def __getitem__(self, task_or_tid) -> Any:
+        tid = task_or_tid.tid if isinstance(task_or_tid, Task) else task_or_tid
+        return self._results[tid]
+
+    def dep_results(self) -> List[Any]:
+        return [self._results[d] for d in self.task.deps]
+
+
+class TaskGraph:
+    """A static DAG of tasks with dependency bookkeeping."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.tasks: List[Task] = []
+        self._succ: Dict[int, List[int]] = {}
+
+    # -- construction -----------------------------------------------------
+    def add(
+        self,
+        fn: Optional[Callable[[TaskContext], Any]] = None,
+        *,
+        deps: Sequence[Task] = (),
+        name: Optional[str] = None,
+        kind: str = "compute",
+        cost: float = 1.0,
+        priority: int = 0,
+        parallel: Optional[ParallelSpec] = None,
+        **meta: Any,
+    ) -> Task:
+        tid = len(self.tasks)
+        dep_ids = tuple(d.tid if isinstance(d, Task) else int(d) for d in deps)
+        for d in dep_ids:
+            if d >= tid or d < 0:
+                raise ValueError(f"dependency {d} of task {tid} is not an existing task")
+        t = Task(
+            tid=tid,
+            name=name or f"{kind}:{tid}",
+            fn=fn,
+            deps=dep_ids,
+            kind=kind,
+            cost=float(cost),
+            priority=priority,
+            parallel=parallel,
+            meta=dict(meta),
+        )
+        self.tasks.append(t)
+        self._succ[tid] = []
+        for d in dep_ids:
+            self._succ[d].append(tid)
+        return t
+
+    # -- queries ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def __iter__(self):
+        return iter(self.tasks)
+
+    def successors(self, task_or_tid) -> List[Task]:
+        tid = task_or_tid.tid if isinstance(task_or_tid, Task) else task_or_tid
+        return [self.tasks[s] for s in self._succ[tid]]
+
+    def indegrees(self) -> List[int]:
+        return [len(t.deps) for t in self.tasks]
+
+    def roots(self) -> List[Task]:
+        return [t for t in self.tasks if not t.deps]
+
+    def topological_order(self) -> List[Task]:
+        """Kahn topological order; raises on cycles (construction forbids
+        them, this is a safety net for hand-built graphs)."""
+        indeg = self.indegrees()
+        frontier = [t.tid for t in self.tasks if indeg[t.tid] == 0]
+        order: List[int] = []
+        while frontier:
+            tid = frontier.pop()
+            order.append(tid)
+            for s in self._succ[tid]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    frontier.append(s)
+        if len(order) != len(self.tasks):
+            raise ValueError("task graph has a cycle")
+        return [self.tasks[t] for t in order]
+
+    def critical_path(self) -> Tuple[float, List[Task]]:
+        """Longest path through the graph by task ``cost`` (a task spawning a
+        parallel region contributes ``cost + cost_per_thread`` — the region
+        runs to completion within the task from the graph's point of view).
+        Returns ``(length_seconds, path_tasks)``."""
+        order = self.topological_order()
+        dist: Dict[int, float] = {}
+        prev: Dict[int, Optional[int]] = {}
+        for t in order:
+            c = t.cost + (t.parallel.cost_per_thread if t.parallel else 0.0)
+            best, arg = 0.0, None
+            for d in t.deps:
+                if dist[d] > best:
+                    best, arg = dist[d], d
+            dist[t.tid] = best + c
+            prev[t.tid] = arg
+        end = max(dist, key=lambda k: dist[k])
+        path: List[Task] = []
+        cur: Optional[int] = end
+        while cur is not None:
+            path.append(self.tasks[cur])
+            cur = prev[cur]
+        return dist[end], list(reversed(path))
+
+    def total_work(self) -> float:
+        return sum(
+            t.cost + (t.parallel.n_threads * t.parallel.cost_per_thread if t.parallel else 0.0)
+            for t in self.tasks
+        )
+
+    def validate(self) -> None:
+        self.topological_order()
+
+    def subgraph_kinds(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for t in self.tasks:
+            out[t.kind] = out.get(t.kind, 0) + 1
+        return out

@@ -1,0 +1,77 @@
+"""Execution tracing for the runtime and simulator.
+
+Traces are lists of ``(worker, t0, t1, kind, label)`` events.  ``kind`` is
+one of ``compute / comm / panel / idle / steal / barrier / switch`` — the
+categories the paper's Fig. 8 (critical path) and Fig. 11d (idle/compute/
+MPI breakdown) are built from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass
+class Event:
+    worker: int
+    t0: float
+    t1: float
+    kind: str
+    label: str = ""
+
+    @property
+    def dt(self) -> float:
+        return self.t1 - self.t0
+
+
+class Trace:
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self.events: List[Event] = []
+
+    def record(self, worker: int, t0: float, t1: float, kind: str, label: str = "") -> None:
+        self.events.append(Event(worker, t0, t1, kind, label))
+
+    @property
+    def makespan(self) -> float:
+        return max((e.t1 for e in self.events), default=0.0)
+
+    def busy_time(self, kinds=("compute", "comm", "panel")) -> float:
+        return sum(e.dt for e in self.events if e.kind in kinds)
+
+    def breakdown(self) -> Dict[str, float]:
+        """Total seconds per event kind, plus derived idle time
+        (makespan * workers - busy)."""
+        out: Dict[str, float] = defaultdict(float)
+        for e in self.events:
+            out[e.kind] += e.dt
+        accounted = sum(out.values())
+        out["idle"] += max(0.0, self.makespan * self.n_workers - accounted)
+        return dict(out)
+
+    def breakdown_fraction(self) -> Dict[str, float]:
+        b = self.breakdown()
+        total = self.makespan * self.n_workers
+        return {k: (v / total if total else 0.0) for k, v in b.items()}
+
+    def per_worker_breakdown(self) -> List[Dict[str, float]]:
+        outs: List[Dict[str, float]] = [defaultdict(float) for _ in range(self.n_workers)]
+        for e in self.events:
+            outs[e.worker][e.kind] += e.dt
+        res = []
+        for w, o in enumerate(outs):
+            busy = sum(o.values())
+            o = dict(o)
+            o["idle"] = max(0.0, self.makespan - busy)
+            res.append(o)
+        return res
+
+    def utilization(self) -> float:
+        if not self.events:
+            return 0.0
+        return self.busy_time() / (self.makespan * self.n_workers)
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e.kind == kind)

@@ -1,0 +1,88 @@
+"""Pallas TPU flash-decoding kernel: one query token against a long KV
+cache, split-K over sequence blocks with lazy-softmax carry.
+
+Grid: (B*H, S/bk) — sequence blocks sequential (minor-most), carrying
+(m, l, acc) scratch; `length` masks the unfilled cache tail.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, bk: int, n_kv: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32)                      # (1, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    s = s / math.sqrt(d)
+    pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = pos < length
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)          # (1, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+    v = v_ref[0].astype(jnp.float32)                      # (bk, d)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, length, *, bk: int = 512, interpret: bool = False):
+    """q: (B,H,d); k/v: (B,S,H,d) (kv pre-repeated to H); length: int32
+    scalar (valid cache entries).  Returns (B,H,d)."""
+    B, S, H, d = k.shape
+    assert S % bk == 0, (S, bk)
+    n_kv = S // bk
+    qf = q.reshape(B * H, 1, d)
+    kf = jnp.swapaxes(k, 1, 2).reshape(B * H, S, d)
+    vf = jnp.swapaxes(v, 1, 2).reshape(B * H, S, d)
+    lvec = jnp.full((1,), length, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bk=bk, n_kv=n_kv),
+        grid=(B * H, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lvec, qf, kf, vf)
+    return out.reshape(B, H, d)

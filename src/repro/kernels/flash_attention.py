@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (causal + sliding-window), forward.
+
+TPU-native tiling: q blocks live in VMEM, the kernel sweeps kv blocks with
+the grid's minor dimension, carrying the (m, l, acc) lazy-softmax state in
+VMEM scratch.  Block sizes default to MXU-aligned (128) multiples.
+
+Grid: (B*H, Sq/bq, Sk/bk)  — kv is the innermost (sequential) dimension, so
+the scratch carry is valid (TPU grids execute minor-most sequentially).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, bq: int, bk: int, n_kv: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, ...] = (acc_ref[...] /
+                         jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q,k,v: (B, H, S, d) with kv heads pre-repeated.  Returns (B,H,S,d)."""
+    B, H, S, d = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q = S // bq
+    n_kv = S // bk
+    scale = 1.0 / math.sqrt(d)
+
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, bq=bq, bk=bk,
+        n_kv=n_kv, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # m
+            pltpu.VMEM((bq,), jnp.float32),        # l
+            pltpu.VMEM((bq, d), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

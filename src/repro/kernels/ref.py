@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,d); k/v: (B,H,S,d) (kv heads already repeated)."""
+    B, H, S, d = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length: int):
+    """q: (B,H,d); k/v: (B,S,H,d); attend to k[:length]."""
+    B, S, H, d = k.shape
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    mask = jnp.arange(S)[None, None, :] < length
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def tile_matmul_ref(a, b, c: Optional[jnp.ndarray] = None):
+    """C (+)= A @ B in f32 accumulation."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    if c is not None:
+        out = out + c.astype(jnp.float32)
+    return out.astype(a.dtype)
+
+
+def ssd_chunk_ref(xdt, cs, Bm, Cm, s_in):
+    """One SSD chunk (the Pallas kernel's unit of work).
+
+    xdt: (L,H,P) = x*dt; cs: (L,H) cumulative log-decay; Bm/Cm: (L,N);
+    s_in: (H,N,P) incoming state.  Returns (y (L,H,P), s_out (H,N,P))."""
+    L, H, P = xdt.shape
+    cb = Cm.astype(jnp.float32) @ Bm.astype(jnp.float32).T            # (L,L)
+    diff = cs[:, None, :] - cs[None, :, :]                            # (L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("ij,ijh,jhp->ihp", cb, decay, xdt.astype(jnp.float32))
+    y_inter = jnp.einsum("in,hnp->ihp", Cm.astype(jnp.float32),
+                         s_in.astype(jnp.float32)) * jnp.exp(cs)[:, :, None]
+    w_end = jnp.exp(cs[-1][None, :] - cs)                             # (L,H)
+    s_out = s_in * jnp.exp(cs[-1])[:, None, None] + jnp.einsum(
+        "jn,jh,jhp->hnp", Bm.astype(jnp.float32), w_end,
+        xdt.astype(jnp.float32))
+    return y_intra + y_inter, s_out

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk step.
+
+One grid step processes one (batch, chunk) pair for a block of heads:
+intra-chunk masked-decay attention + inter-chunk state contribution + state
+update, with the chunk-to-chunk state recurrence carried in VMEM scratch
+(the chunk axis is the grid's minor-most dimension, hence sequential).
+
+This is the TPU adaptation of the SSD algorithm's Triton kernel: the L x L
+decay matrix is built in VMEM per (chunk, head-block), never in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, cs_ref, b_ref, c_ref, y_ref, slast_ref, s_ref, *,
+                n_chunks: int, L: int, H: int, N: int, P: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)   # (L, H, P)
+    cs = cs_ref[0, 0].astype(jnp.float32)      # (L, H)
+    Bm = b_ref[0, 0].astype(jnp.float32)       # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)       # (L, N)
+    s_in = s_ref[...]                         # (H, N, P)
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i.B_j) exp(cs_i - cs_j) xdt_j
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tril = ii >= jj
+    # per-head decay handled head-by-head to keep the VMEM block 2D-friendly
+    y = jnp.zeros((L, H, P), jnp.float32)
+
+    def head_body(h, y):
+        csh = cs[:, h]                                     # (L,)
+        decay = jnp.where(tril, jnp.exp(csh[:, None] - csh[None, :]), 0.0)
+        w = cb * decay                                     # (L, L)
+        yh = jax.lax.dot_general(w, xdt[:, h, :], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L,P)
+        # inter-chunk: C_i . s_in[h] * exp(cs_i)
+        yh += jax.lax.dot_general(Cm, s_in[h], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32) \
+            * jnp.exp(csh)[:, None]
+        return y.at[:, h, :].set(yh)
+
+    y = jax.lax.fori_loop(0, H, head_body, y)
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+    # state update: s_out[h] = s_in[h]*exp(cs_L[h]) + sum_j B_j w_end[j,h] xdt[j,h]
+    def state_body(h, s):
+        csh = cs[:, h]
+        w_end = jnp.exp(csh[-1] - csh)                     # (L,)
+        bw = Bm * w_end[:, None]                           # (L, N)
+        upd = jax.lax.dot_general(bw, xdt[:, h, :], (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (N,P)
+        return s.at[h].set(s[h] * jnp.exp(csh[-1]) + upd)
+
+    s_new = jax.lax.fori_loop(0, H, state_body, s_in)
+    s_ref[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        slast_ref[0, ...] = s_new.astype(slast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(xdt, cs, Bm, Cm, *, interpret: bool = False):
+    """xdt: (B, nc, L, H, P) = x*dt per chunk; cs: (B, nc, L, H) cumulative
+    log-decay; Bm/Cm: (B, nc, L, N).  Returns (y (B,nc,L,H,P),
+    final_state (B,H,N,P))."""
+    B, nc, L, H, P = xdt.shape
+    N = Bm.shape[-1]
+
+    y, s_last = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc, L=L, H=H, N=N, P=P),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, L, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, H, N, P), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, L, H, P), xdt.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xdt, cs, Bm, Cm)
+    return y, s_last
+
+
+def ssd_scan_ref(xdt, cs, Bm, Cm):
+    """jnp oracle over the same chunked layout (wraps ref.ssd_chunk_ref)."""
+    from .ref import ssd_chunk_ref
+    B, nc, L, H, P = xdt.shape
+    N = Bm.shape[-1]
+    ys = []
+    s = jnp.zeros((B, H, N, P), jnp.float32)
+    for c in range(nc):
+        ych = []
+        sch = []
+        for b in range(B):
+            y, s_b = ssd_chunk_ref(xdt[b, c], cs[b, c], Bm[b, c], Cm[b, c], s[b])
+            ych.append(y)
+            sch.append(s_b)
+        ys.append(jnp.stack(ych))
+        s = jnp.stack(sch)
+    return jnp.stack(ys, axis=1).astype(xdt.dtype), s

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+# (LICM hoists convert(saved-carry-stack) out of the backward while loop,
+# materializing an f32 copy of every layer's residual stream — 2x the remat
+# stash.  Disabling it is a deliberate, documented XLA tuning choice; see
+# EXPERIMENTS.md §Perf iteration 1.)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices, record memory/cost analysis and collective
+bytes for the roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+The two XLA_FLAGS lines above MUST stay the first statements — jax locks
+the device count at first init.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_config
+from ..models import lm
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..sharding.rules import ShardCtx, make_ctx, params_pspecs
+from ..train.steps import StepConfig, make_train_step
+from .mesh import make_production_mesh
+from .shapes import SHAPE_DEFS, SHAPES, cell_applicable, decode_cache_len, input_specs
+
+OPT_CFG = AdamWConfig()
+
+
+# ---------------------------------------------------------------------------
+# collective-byte accounting from the compiled/lowered HLO text
+# ---------------------------------------------------------------------------
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective op, by kind."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result-shape = text before ' = kind('; count each collective once
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = ([^=]*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if m:
+            kind = m.group(2)
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+def pick_microbatches(cfg, shape: str, dp: int) -> int:
+    """Smallest power-of-two microbatch count whose per-microbatch remat
+    carry stash (n_layers x per-seq residual stream, bf16) fits a ~4 GiB
+    budget per device."""
+    sd = SHAPE_DEFS[shape]
+    if sd["kind"] != "train":
+        return 1
+    b_local = max(1, sd["global_batch"] // dp)
+    n_layers = cfg.n_layers + getattr(cfg, "enc_layers", 0)
+    per_seq = n_layers * sd["seq_len"] * cfg.d_model * 2  # bf16 carry
+    budget = 4 * 2 ** 30
+    need = max(1, -(-b_local * per_seq // budget))
+    micro = 1
+    while micro < need and micro < b_local:
+        micro *= 2
+    return micro
+
+
+def build_cell(arch: str, shape: str, mesh, *, step_cfg: Optional[StepConfig] = None):
+    """Returns (jitted_fn, arg_structs) for the cell, with shardings."""
+    cfg = get_config(arch)
+    kind = SHAPE_DEFS[shape]["kind"]
+    seq_shard = shape == "long_500k"
+    ctx = make_ctx(mesh, cfg)
+    ctx.seq_shard_cache = seq_shard
+
+    pspecs = lm.param_pspecs(cfg, ctx)
+    param_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    params = lm.abstract_params(cfg)
+    batch_axes = ctx.batch_axes
+
+    def batch_sharding(struct):
+        ndim = len(struct.shape)
+        if SHAPE_DEFS[shape]["global_batch"] == 1:
+            return NamedSharding(mesh, P(*([None] * ndim)))
+        return NamedSharding(mesh, P(batch_axes, *([None] * (ndim - 1))))
+
+    if kind == "train":
+        specs = input_specs(cfg, shape)
+        batch_sh = {k: batch_sharding(v) for k, v in specs.items()}
+        opt_state = {
+            "m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_sh = {
+            "m": param_sh, "v": param_sh,
+            "step": NamedSharding(mesh, P()),
+        }
+        micro = pick_microbatches(cfg, shape, ctx.dp_size)
+        sc = step_cfg or StepConfig(microbatches=micro, overlap="hybrid")
+        fn = make_train_step(cfg, OPT_CFG, ctx, sc, grad_pspecs=param_sh)
+        jitted = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None))
+        return jitted, (params, opt_state, specs), cfg, ctx
+
+    if kind == "prefill":
+        specs = input_specs(cfg, shape)
+        batch_sh = {k: batch_sharding(v) for k, v in specs.items()}
+        max_len = SHAPE_DEFS[shape]["seq_len"] + 1
+
+        def fn(p, b):
+            return lm.prefill(p, cfg, b, ctx, max_len=max_len)
+
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+        return jitted, (params, specs), cfg, ctx
+
+    # decode
+    b = SHAPE_DEFS[shape]["global_batch"]
+    cache_len = decode_cache_len(shape)
+    n_patches = cfg.n_patches if cfg.family == "vlm" else (
+        256 if cfg.family == "encdec" else 0)
+    cache = lm.cache_struct(cfg, b, cache_len, n_patches=n_patches)
+    cp = lm.cache_pspecs(cfg, ctx)
+    cache_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), cp,
+                            is_leaf=lambda x: isinstance(x, P))
+    tok = input_specs(cfg, shape)
+    tok_sh = {"tokens": batch_sharding(tok["tokens"])}
+
+    def fn(p, c, t):
+        return lm.decode_step(p, cfg, c, t["tokens"], ctx)
+
+    jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh, tok_sh))
+    return jitted, (params, cache, tok), cfg, ctx
+
+
+# ---------------------------------------------------------------------------
+# run one cell
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             hlo_dir: Optional[str] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        jitted, args, cfg, ctx = build_cell(arch, shape, mesh)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        if hlo_dir:
+            import gzip
+            os.makedirs(hlo_dir, exist_ok=True)
+            with gzip.open(os.path.join(
+                    hlo_dir, f"{arch}__{shape}__{mesh_kind}.hlo.gz"), "wt") as hf:
+                hf.write(hlo)
+        coll = collective_stats(hlo)
+        from . import hlo_analysis
+        corrected = hlo_analysis.analyze(hlo)
+        sd = SHAPE_DEFS[shape]
+        cache_bytes = 0
+        if sd["kind"] == "decode":
+            cache = lm.cache_struct(cfg, sd["global_batch"],
+                                    decode_cache_len(shape))
+            cache_bytes = sum(
+                int(jnp.dtype(s.dtype).itemsize) *
+                int(__import__("math").prod(s.shape))
+                for s in jax.tree.leaves(cache)) // mesh.devices.size
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower - t0, 2),
+            "compile_s": round(t_compile - t_lower, 2),
+            "memory": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "collectives_corrected": corrected["collectives"],
+            "hlo_dot_flops": corrected["dot_flops"],
+            "n_devices": mesh.devices.size,
+            "params": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+            "microbatches": pick_microbatches(cfg, shape, ctx.dp_size),
+            "cache_bytes_per_dev": cache_bytes,
+            "cell_meta": {
+                "seq_len": sd["seq_len"], "global_batch": sd["global_batch"],
+                "kind": sd["kind"],
+                "n_layers": cfg.n_layers + (cfg.enc_layers or 0),
+                "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+                "head_dim": cfg.head_dim, "window": cfg.window,
+                "local_global_ratio": cfg.local_global_ratio,
+            },
+        })
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=SHAPES)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for a, s, m in cells:
+        fname = os.path.join(args.out, f"{a}__{s}__{m}.json")
+        if os.path.exists(fname):
+            with open(fname) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached] {a} {s} {m}: {prev['status']}")
+                continue
+        rec = run_cell(a, s, m, hlo_dir=os.path.join(args.out, "hlo"))
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            tmp = rec["memory"].get("temp_size_in_bytes", 0)
+            extra = (f" flops={rec['flops']:.3g} temp={tmp/2**30:.2f}GiB "
+                     f"coll={rec['collectives']['total_bytes']/2**30:.2f}GiB "
+                     f"({rec['compile_s']}s compile)")
+        elif status == "error":
+            extra = " " + rec["error"][:200]
+            failures += 1
+        print(f"[{status}] {a} {s} {m}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

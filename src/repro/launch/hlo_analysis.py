@@ -1,0 +1,210 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, so collectives and
+dot FLOPs inside ``lax.scan`` (our layer stacks) are undercounted by the
+trip count.  This module parses the optimized HLO text:
+
+* splits it into named computations,
+* builds the call multiplicity map: while bodies get (trip count) pulled
+  from the loop condition's comparison constant; fusion/call/conditional
+  computations inherit the caller's multiplicity,
+* sums collective bytes (by kind) and dot-op FLOPs per computation, scaled
+  by multiplicity.
+
+Conventions: collective "bytes" = max(operand bytes, result bytes) of the
+op (per-participant, as HLO is the per-device SPMD program).  Conditionals
+count both branches (upper bound; branches are layer-flag variants whose
+cost is similar).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """name -> body text.  Computations start at column 0 with
+    ``%name (params) -> type {`` or ``ENTRY %name ...`` and end at '}'."""
+    comps: Dict[str, str] = {}
+    cur_name: Optional[str] = None
+    cur_lines: List[str] = []
+    for line in hlo.splitlines():
+        if not line.startswith((" ", "\t")) and "{" in line and ("(" in line):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur_name = m.group(1)
+                cur_lines = []
+                continue
+        if line.startswith("}"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _find_entry(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)\s*\(", hlo, re.M)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_body: str) -> int:
+    """Extract the loop bound from the condition computation: the largest
+    integer constant it compares against."""
+    best = 1
+    for m in re.finditer(r"constant\((\d+)\)", cond_body):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def call_multiplicities(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+    entry = _find_entry(hlo)
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, body in comps.items():
+        # while loops: condition=%c, body=%b
+        for m in re.finditer(r"while\(.*?\).*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", body):
+            cond, wbody = m.group(1), m.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            edges[name].append((wbody, float(trips)))
+            edges[name].append((cond, float(trips)))
+        # fusions / calls
+        for m in re.finditer(r"calls=%?([\w.\-]+)", body):
+            edges[name].append((m.group(1), 1.0))
+        for m in re.finditer(r"to_apply=%?([\w.\-]+)", body):
+            edges[name].append((m.group(1), 1.0))
+        # conditionals: branch_computations={%a, %b}  / true/false computations
+        for m in re.finditer(r"branch_computations=\{([^}]*)\}", body):
+            for b in m.group(1).split(","):
+                edges[name].append((b.strip().lstrip("%"), 1.0))
+        for m in re.finditer(r"(?:true|false)_computation=%?([\w.\-]+)", body):
+            edges[name].append((m.group(1), 1.0))
+
+    # propagate multiplicities topologically (graph is acyclic)
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen_guard = 0
+    while frontier:
+        seen_guard += 1
+        if seen_guard > 100000:
+            break
+        cur = frontier.pop()
+        for child, factor in edges.get(cur, ()):
+            add = mult[cur] * factor
+            before = mult[child]
+            mult[child] += add
+            frontier.append(child)
+    return dict(mult)
+
+
+def collective_bytes(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Trip-count-scaled per-participant collective bytes by kind."""
+    comps = split_computations(hlo)
+    mult = call_multiplicities(hlo)
+    out = {k: {"count": 0.0, "bytes": 0.0} for k in _COLL_KINDS}
+    for name, body in comps.items():
+        f = mult.get(name, 0.0)
+        if f == 0.0:
+            continue
+        for line in body.splitlines():
+            ls = line.strip()
+            m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.*?) (all-gather|all-reduce|"
+                         r"reduce-scatter|all-to-all|collective-permute)"
+                         r"(?:-start|-done)?\((.*?)\)", ls)
+            if not m:
+                continue
+            if "-done(" in ls:
+                continue  # count start ops once
+            kind = m.group(2)
+            res_bytes = _shape_list_bytes(m.group(1))
+            arg_bytes = _shape_list_bytes(m.group(3))
+            out[kind]["count"] += f
+            out[kind]["bytes"] += f * max(res_bytes, arg_bytes)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = (\S+)")
+_DOT_RE = re.compile(
+    r"= (\S+) dot\(([^)]*)\), .*?lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def dot_flops(hlo: str) -> float:
+    """Trip-count-scaled FLOPs of dot ops (2 * prod(result) * contracted).
+    Operand shapes are resolved through a per-computation symbol table
+    (HLO prints operands as bare %names)."""
+    comps = split_computations(hlo)
+    mult = call_multiplicities(hlo)
+    total = 0.0
+    for name, body in comps.items():
+        f = mult.get(name, 0.0)
+        if f == 0.0:
+            continue
+        # symbol table: instruction name -> result type string
+        sym = {}
+        for line in body.splitlines():
+            dm = _DEF_RE.match(line)
+            if dm:
+                sym[dm.group(1)] = dm.group(2)
+        for line in body.splitlines():
+            m = _DOT_RE.search(line)
+            if not m:
+                continue
+            res = _shape_dims(m.group(1))
+            cdims = [int(d) for d in m.group(3).split(",") if d]
+            operands = [o.strip().lstrip("%") for o in m.group(2).split(",")]
+            if not res or not operands:
+                continue
+            lhs_type = sym.get(operands[0], "")
+            lhs = _shape_dims(lhs_type)
+            res_elems = math.prod(res[0][1]) if res[0][1] else 1
+            if lhs and cdims:
+                contracted = math.prod(lhs[0][1][d] for d in cdims
+                                       if d < len(lhs[0][1]))
+            else:
+                contracted = 1
+            total += f * 2.0 * res_elems * contracted
+    return total
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    return {
+        "collectives": collective_bytes(hlo),
+        "dot_flops": dot_flops(hlo),
+    }

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+
+"""Perf-iteration harness: compile one (arch x shape) cell under a named
+variant and report the roofline terms (the hypothesis->change->measure loop
+of EXPERIMENTS.md §Perf).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.perf_iter --arch deepseek-67b \
+        --shape train_4k --variant baseline
+Variants are keyword overrides, e.g.:
+    --set micro=4 --set remat_group=5 --set fsdp=false --set compress=true
+"""
+
+import argparse
+import json
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..models import lm
+from ..optim.adamw import AdamWConfig
+from ..sharding.rules import make_ctx
+from ..train.steps import StepConfig, make_train_step
+from . import hlo_analysis
+from .dryrun import pick_microbatches
+from .mesh import make_production_mesh
+from .shapes import SHAPE_DEFS, decode_cache_len, input_specs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+_KIND_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def compile_cell(arch: str, shape: str, overrides: Dict[str, Any],
+                 multi_pod: bool = False):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, cfg)
+    ctx.seq_shard_cache = shape == "long_500k"
+    ctx.fsdp = overrides.get("fsdp", True)
+    ctx.remat_group = int(overrides.get("remat_group", 1))
+    ctx.moe_wire_bf16 = overrides.get("moe_wire_bf16", False)
+    ctx.moe_gather_tokens = overrides.get("moe_gather_tokens", False)
+    if overrides.get("no_shard_kv"):
+        ctx.shard_kv = False
+
+    pspecs = lm.param_pspecs(cfg, ctx)
+    param_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    params = lm.abstract_params(cfg)
+    sd = SHAPE_DEFS[shape]
+    kind = sd["kind"]
+
+    def batch_sharding(struct):
+        nd = len(struct.shape)
+        if sd["global_batch"] == 1:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        return NamedSharding(mesh, P(ctx.batch_axes, *([None] * (nd - 1))))
+
+    t0 = time.time()
+    if kind == "train":
+        specs = input_specs(cfg, shape)
+        batch_sh = {k: batch_sharding(v) for k, v in specs.items()}
+        opt = {"m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+               "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_sh = {"m": param_sh, "v": param_sh, "step": NamedSharding(mesh, P())}
+        micro = int(overrides.get("micro", 0)) or pick_microbatches(cfg, shape, ctx.dp_size)
+        sc = StepConfig(microbatches=micro,
+                        overlap=overrides.get("overlap", "hybrid"),
+                        compress_grads=bool(overrides.get("compress", False)))
+        fn = make_train_step(cfg, AdamWConfig(), ctx, sc, grad_pspecs=param_sh)
+        jt = jax.jit(fn, in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, None))
+        args = (params, opt, specs)
+    elif kind == "prefill":
+        specs = input_specs(cfg, shape)
+        batch_sh = {k: batch_sharding(v) for k, v in specs.items()}
+        fn = lambda p, b: lm.prefill(p, cfg, b, ctx, max_len=sd["seq_len"] + 1)
+        jt = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+        args = (params, specs)
+        micro = 1
+    else:
+        b = sd["global_batch"]
+        cache = lm.cache_struct(cfg, b, decode_cache_len(shape),
+                                n_patches=cfg.n_patches if cfg.family == "vlm"
+                                else (256 if cfg.family == "encdec" else 0))
+        cp = lm.cache_pspecs(cfg, ctx)
+        cache_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), cp,
+                                is_leaf=lambda x: isinstance(x, P))
+        tok = input_specs(cfg, shape)
+        fn = lambda p, c, t: lm.decode_step(p, cfg, c, t["tokens"], ctx)
+        jt = jax.jit(fn, in_shardings=(param_sh, cache_sh,
+                                       {"tokens": batch_sharding(tok["tokens"])}))
+        args = (params, cache, tok)
+        micro = 1
+
+    with mesh:
+        compiled = jt.lower(*args).compile()
+    dt = time.time() - t0
+    return compiled, cfg, ctx, micro, dt
+
+
+def report(arch: str, shape: str, overrides: Dict[str, Any],
+           multi_pod: bool = False) -> Dict[str, Any]:
+    compiled, cfg, ctx, micro, dt = compile_cell(arch, shape, overrides, multi_pod)
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    dots = hlo_analysis.dot_flops(hlo)
+    coll_t = sum(coll.get(k, {}).get("bytes", 0.0) * f / ICI_BW
+                 for k, f in _KIND_FACTOR.items())
+    compute_t = dots / PEAK_FLOPS
+    out = {
+        "arch": arch, "shape": shape, "overrides": overrides, "micro": micro,
+        "temp_gib": round(mem.temp_size_in_bytes / 2 ** 30, 2),
+        "fits_16g": mem.temp_size_in_bytes < 16 * 2 ** 30,
+        "hlo_dot_flops": dots,
+        "compute_s": round(compute_t, 4),
+        "collective_s": round(coll_t, 4),
+        "coll_by_kind": {k: round(v["bytes"] / 2 ** 30, 2)
+                         for k, v in coll.items() if isinstance(v, dict) and v["bytes"]},
+        "dominant": "collective" if coll_t > compute_t else "compute",
+        "compile_s": round(dt, 1),
+    }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="key=value overrides (micro, remat_group, fsdp, "
+                         "compress, overlap, moe_wire_bf16, no_shard_kv)")
+    args = ap.parse_args()
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), v)
+    print(json.dumps(report(args.arch, args.shape, overrides, args.multi),
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

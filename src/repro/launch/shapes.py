@@ -1,0 +1,88 @@
+"""Assigned input-shape set and abstract input specs per (arch, shape) cell.
+
+Shapes (assignment):
+* ``train_4k``     seq_len=4096,   global_batch=256  -> lowers train_step
+* ``prefill_32k``  seq_len=32768,  global_batch=32   -> lowers prefill_step
+* ``decode_32k``   seq_len=32768,  global_batch=128  -> lowers serve_step
+                   (one new token against a seq_len KV cache)
+* ``long_500k``    seq_len=524288, global_batch=1    -> serve_step; only for
+                   sub-quadratic archs (ssm/hybrid/sliding-window) — skipped
+                   for pure full-attention archs (DESIGN.md §Shape-set).
+
+``[audio]``/``[vlm]`` modality frontends are stubs: ``input_specs`` provides
+precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_DEFS = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic attention)
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def long_ok(cfg: ModelConfig) -> bool:
+    if cfg.family in LONG_OK_FAMILIES:
+        return True
+    # sliding-window archs (gemma3: 5/6 layers local) qualify; decode-time
+    # cost of the remaining global layers is linear in context.
+    return bool(cfg.local_global_ratio and cfg.window)
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not long_ok(cfg):
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    # audio frontend stub: one frame embedding per target token position
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sd = SHAPE_DEFS[shape]
+    b, s = sd["global_batch"], sd["seq_len"]
+    kind = sd["kind"]
+    i32 = jnp.int32
+    dt = cfg.jdtype
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if kind == "train":
+        batch = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.family == "encdec":
+            batch["enc_input"] = jax.ShapeDtypeStruct((b, enc_len_for(cfg, s), cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+        return batch
+    if kind == "prefill":
+        batch = {"tokens": tok(b, s)}
+        if cfg.family == "encdec":
+            batch["enc_input"] = jax.ShapeDtypeStruct((b, enc_len_for(cfg, s), cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok(b, 1)}
+
+
+def decode_cache_len(shape: str) -> int:
+    return SHAPE_DEFS[shape]["seq_len"]

@@ -1,0 +1,39 @@
+"""SLATE-style tiled linear algebra on task graphs — the paper's evaluation
+substrate: LU, QR (gang-scheduled multithreaded panels) and Cholesky
+(overlap-sensitive light panels)."""
+
+from .cholesky import build_cholesky_graph, cholesky_extract, random_spd, reference_cholesky
+from .lu import build_lu_graph, lu_extract, random_diagdom
+from .qr import build_qr_graph, qr_extract_r, qr_reconstruct
+from .tiles import CostModel, TileStore, to_tiles
+
+KERNELS = {
+    "cholesky": build_cholesky_graph,
+    "lu": build_lu_graph,
+    "qr": build_qr_graph,
+}
+
+
+def paper_graph(kernel: str, nb: int, b: int = 192, **kw):
+    """Cost-model-only graph at paper scale (for the simulator / static
+    scheduler benchmarks).  ``kernel`` in {cholesky, lu, qr}."""
+    return KERNELS[kernel](nb, b, store=None, **kw)
+
+
+__all__ = [
+    "CostModel",
+    "KERNELS",
+    "TileStore",
+    "build_cholesky_graph",
+    "build_lu_graph",
+    "build_qr_graph",
+    "cholesky_extract",
+    "lu_extract",
+    "paper_graph",
+    "qr_extract_r",
+    "qr_reconstruct",
+    "random_diagdom",
+    "random_spd",
+    "reference_cholesky",
+    "to_tiles",
+]

@@ -1,0 +1,147 @@
+"""Tiled right-looking Cholesky factorization as a SLATE-style task graph.
+
+Structure per step ``k`` — mirroring SLATE's nesting (top-level tasks with
+``omp depend`` at block-column granularity, each *creating child tasks* and
+taskwait-ing on them):
+
+* ``panel*[k]``   — parent task; children: ``potrf[k]`` then independent
+                    ``trsm[i,k]`` ("panel factorization is done in a bunch of
+                    independent tasks", §5.4); joined by ``panel.join[k]``,
+* ``bcast[k]``    — blocking communication: ship the factored column,
+* ``look*[k]``    — lookahead parent; children update block column ``k+1``,
+* ``trail*[k]``   — trailing parent; children update columns ``k+2..``.
+
+The victim-selection anomaly the paper fixes lives in this shape: a trailing
+parent dumps its many children onto *one* worker's queue; history-based
+thieves lock onto that queue and the panel's children (and the broadcast
+behind them) serialize on whatever worker picked the panel up — delaying the
+critical path.  Hybrid stealing spreads the panel children (paper Fig. 9/11).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.taskgraph import TaskGraph
+from .tiles import CostModel, TileStore, tile_gemm_sub, tile_potrf, tile_trsm_right_lower_t
+
+# per-child task-creation overhead charged to parent tasks (OpenMP task
+# creation is ~0.5-1us)
+SPAWN_COST = 7e-7
+
+
+def build_cholesky_graph(
+    nb: int,
+    b: int = 64,
+    *,
+    store: Optional[TileStore] = None,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    comm: bool = True,
+) -> TaskGraph:
+    """Build the tiled-Cholesky task graph.  If ``store`` is given, tasks
+    carry numeric bodies factoring it in place (lower-triangular result);
+    otherwise bodies are ``None`` (cost-model graphs for the simulator)."""
+    cm = cost or CostModel()
+    g = TaskGraph(f"cholesky[{nb}x{nb},b={b}]")
+    numeric = store is not None
+    noop = (lambda ctx: None) if numeric else None
+
+    def potrf_body(k):
+        def fn(ctx):
+            store[(k, k)] = tile_potrf(store[(k, k)])
+        return fn if numeric else None
+
+    def trsm_body(i, k):
+        def fn(ctx):
+            store[(i, k)] = tile_trsm_right_lower_t(store[(i, k)], store[(k, k)])
+        return fn if numeric else None
+
+    def update_body(i, j, k):
+        def fn(ctx):
+            store[(i, j)] = tile_gemm_sub(store[(i, j)], store[(i, k)], store[(j, k)])
+        return fn if numeric else None
+
+    join_look = None     # join of lookahead[k-1] (column k final)
+    join_trail = None    # join of trailing[k-1]
+
+    for k in range(nb):
+        # ---- panel family -------------------------------------------------
+        n_children = nb - k
+        pparent = g.add(noop, name=f"panel*[{k}]", kind="panel",
+                        cost=SPAWN_COST * n_children, priority=3,
+                        deps=[join_look] if join_look is not None else [], step=k)
+        potrf = g.add(potrf_body(k), name=f"potrf[{k}]", kind="panel",
+                      cost=cm.potrf(b), priority=3, deps=[pparent], step=k)
+        trsms = [
+            g.add(trsm_body(i, k), name=f"trsm[{i},{k}]", kind="panel",
+                  cost=cm.trsm(b), priority=3, deps=[potrf], step=k)
+            for i in range(k + 1, nb)
+        ]
+        pjoin = g.add(noop, name=f"panel.join[{k}]", kind="panel", cost=0.0,
+                      priority=3, deps=trsms or [potrf], step=k)
+
+        col_dep = pjoin
+        if comm:
+            col_dep = g.add(noop, name=f"bcast[{k}]", kind="comm",
+                            cost=cm.bcast(nb - k, b, ranks), priority=3,
+                            deps=[pjoin], step=k)
+
+        base_deps = [col_dep] + ([join_trail] if join_trail is not None else [])
+
+        # ---- lookahead family (column k+1) --------------------------------
+        if k + 1 < nb:
+            lparent = g.add(noop, name=f"look*[{k}]", kind="lookahead",
+                            cost=SPAWN_COST * (nb - k - 1), priority=2,
+                            deps=base_deps, step=k)
+            lchildren = [
+                g.add(update_body(i, k + 1, k), name=f"upd[{i},{k + 1},{k}]",
+                      kind="lookahead",
+                      cost=cm.syrk(b) if i == k + 1 else cm.gemm(b),
+                      priority=2, deps=[lparent], step=k)
+                for i in range(k + 1, nb)
+            ]
+            join_look = g.add(noop, name=f"look.join[{k}]", kind="lookahead",
+                              cost=0.0, priority=2, deps=lchildren, step=k)
+        else:
+            join_look = None
+
+        # ---- trailing family (columns k+2..) -------------------------------
+        if k + 2 < nb:
+            n_tr = sum(nb - j for j in range(k + 2, nb))
+            tparent = g.add(noop, name=f"trail*[{k}]", kind="compute",
+                            cost=SPAWN_COST * n_tr, priority=0,
+                            deps=base_deps, step=k)
+            tchildren = []
+            for j in range(k + 2, nb):
+                for i in range(j, nb):
+                    tchildren.append(
+                        g.add(update_body(i, j, k), name=f"upd[{i},{j},{k}]",
+                              kind="compute",
+                              cost=cm.syrk(b) if i == j else cm.gemm(b),
+                              priority=0, deps=[tparent], step=k))
+            join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",
+                               cost=0.0, priority=0, deps=tchildren, step=k)
+        else:
+            join_trail = None
+    return g
+
+
+def cholesky_extract(store: TileStore) -> jnp.ndarray:
+    """Assemble L (zeroing the strictly-upper tiles)."""
+    return jnp.tril(store.assemble())
+
+
+def reference_cholesky(a: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.cholesky(a)
+
+
+def random_spd(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, n))
+    a = m @ m.T + n * np.eye(n)
+    return jnp.asarray(a, dtype=dtype)

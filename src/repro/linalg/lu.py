@@ -1,0 +1,131 @@
+"""Tiled LU factorization (no pivoting; callers supply diagonally-dominant
+matrices) as a SLATE-style task graph with gang-scheduled panel regions.
+
+Structure per step ``k`` (paper Fig. 5/6):
+
+* ``panel[k]``  — ONE heavy task forking a nested parallel region
+  (:func:`~repro.linalg.panels.lu_panel_region`, two blocking barriers per
+  column) — the region the paper gang-schedules,
+* ``bcast[k]``  — send the factored panel to the other ranks (comm task),
+* ``col[k+1,k]`` — the lookahead column update (critical path),
+* ``trail*[k]`` — trailing parent creating one child per remaining column
+  (``U_kj = L_kk^{-1} A_kj`` then ``A_ij -= L_ik U_kj``), joined for the next
+  step's dependencies.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.taskgraph import ParallelSpec, TaskGraph
+from .cholesky import SPAWN_COST
+from .panels import lu_panel_region
+from .tiles import CostModel, TileStore, tile_gemm_nn_sub, tile_trsm_left_lower_unit
+
+
+def build_lu_graph(
+    nb: int,
+    b: int = 64,
+    *,
+    store: Optional[TileStore] = None,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    gang_panels: Optional[bool] = None,
+    comm: bool = True,
+) -> TaskGraph:
+    cm = cost or CostModel()
+    g = TaskGraph(f"lu[{nb}x{nb},b={b}]")
+    numeric = store is not None
+    noop = (lambda ctx: None) if numeric else None
+
+    def panel_body_factory(k: int, n_threads: int):
+        """Numeric panel task: gathers block column k, forks the gang region,
+        scatters the factored tiles back."""
+        def fn(ctx):
+            panel = np.concatenate(
+                [np.asarray(store[(i, k)]) for i in range(k, store.nb)], axis=0)
+            body = lu_panel_region(panel, store.b, n_threads)
+            ctx.parallel(n_threads, body, gang=gang_panels)
+            for idx, i in enumerate(range(k, store.nb)):
+                store[(i, k)] = jnp.asarray(panel[idx * store.b:(idx + 1) * store.b])
+        return fn
+
+    def col_body(j: int, k: int):
+        def fn(ctx):
+            store[(k, j)] = tile_trsm_left_lower_unit(store[(k, k)], store[(k, j)])
+            for i in range(k + 1, store.nb):
+                store[(i, j)] = tile_gemm_nn_sub(store[(i, j)], store[(i, k)], store[(k, j)])
+        return fn if numeric else None
+
+    def col_cost(k: int) -> float:
+        return cm.trsm(b) + 2.0 * (nb - k - 1) * b ** 3 / cm.flop_rate
+
+    join_look = None
+    join_trail = None
+
+    for k in range(nb):
+        m_tiles = nb - k
+        n_threads = max(1, min(panel_threads, m_tiles))
+        pdeps = [join_look] if join_look is not None else []
+        if numeric:
+            p = g.add(panel_body_factory(k, n_threads), name=f"panel[{k}]",
+                      kind="panel", cost=cm.panel_lu(m_tiles, b), priority=3,
+                      deps=pdeps, step=k)
+        else:
+            p = g.add(None, name=f"panel[{k}]", kind="panel",
+                      cost=0.05 * cm.panel_lu(m_tiles, b), priority=3, deps=pdeps,
+                      parallel=ParallelSpec(
+                          n_threads=n_threads,
+                          cost_per_thread=cm.panel_lu(m_tiles, b) / n_threads,
+                          n_barriers=2 * b, blocking=True),
+                      step=k)
+
+        col_dep = p
+        if comm:
+            col_dep = g.add(noop, name=f"bcast[{k}]", kind="comm",
+                            cost=cm.bcast(m_tiles, b, ranks), priority=3,
+                            deps=[p], step=k)
+        base_deps = [col_dep] + ([join_trail] if join_trail is not None else [])
+
+        # lookahead column (single task, critical path)
+        if k + 1 < nb:
+            join_look = g.add(col_body(k + 1, k), name=f"col[{k + 1},{k}]",
+                              kind="lookahead", cost=col_cost(k), priority=2,
+                              deps=base_deps, step=k)
+        else:
+            join_look = None
+
+        # trailing family
+        if k + 2 < nb:
+            tparent = g.add(noop, name=f"trail*[{k}]", kind="compute",
+                            cost=SPAWN_COST * (nb - k - 2), priority=0,
+                            deps=base_deps, step=k)
+            tchildren = [
+                g.add(col_body(j, k), name=f"col[{j},{k}]", kind="compute",
+                      cost=col_cost(k), priority=0, deps=[tparent], step=k)
+                for j in range(k + 2, nb)
+            ]
+            join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",
+                               cost=0.0, priority=0, deps=tchildren, step=k)
+        else:
+            join_trail = None
+    return g
+
+
+def lu_extract(store: TileStore):
+    """Assemble (L_unit, U) from the packed in-place factorization."""
+    a = store.assemble()
+    l = jnp.tril(a, -1) + jnp.eye(a.shape[0], dtype=a.dtype)
+    u = jnp.triu(a)
+    return l, u
+
+
+def random_diagdom(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, n))
+    m += np.diag(np.abs(m).sum(axis=1) + 1.0)
+    return jnp.asarray(m, dtype=dtype)

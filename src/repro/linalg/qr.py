@@ -1,0 +1,137 @@
+"""Tiled Householder QR as a SLATE-style task graph with gang-scheduled
+panel regions (communication-avoiding flavor: per-column reductions are the
+only panel synchronization; no pivoting — paper §5.2: "the panel
+factorization is the most critical task to the task graph of QR").
+
+Structure per step ``k``: like LU — gang-scheduled ``panel[k]`` (4 blocking
+barriers per column), ``bcast[k]`` shipping {V, T}, a lookahead column task
+and a trailing parent/children/join family applying
+``A_j <- (I - V T V^T)^T A_j``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.taskgraph import ParallelSpec, TaskGraph
+from .cholesky import SPAWN_COST
+from .panels import qr_form_t, qr_panel_region
+from .tiles import CostModel, TileStore
+
+
+def build_qr_graph(
+    nb: int,
+    b: int = 64,
+    *,
+    store: Optional[TileStore] = None,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    gang_panels: Optional[bool] = None,
+    comm: bool = True,
+) -> TaskGraph:
+    cm = cost or CostModel()
+    g = TaskGraph(f"qr[{nb}x{nb},b={b}]")
+    numeric = store is not None
+    noop = (lambda ctx: None) if numeric else None
+    # side store for the panel reflectors: k -> (V, T) with V (m x b)
+    vt_store: Dict[int, tuple] = {}
+    if store is not None:
+        store.vt_store = vt_store  # exposed for validation
+
+    def panel_body_factory(k: int, n_threads: int):
+        def fn(ctx):
+            panel = np.concatenate(
+                [np.asarray(store[(i, k)]) for i in range(k, store.nb)], axis=0)
+            body, taus = qr_panel_region(panel, store.b, n_threads)
+            ctx.parallel(n_threads, body, gang=gang_panels)
+            T = qr_form_t(panel, taus)
+            V = np.tril(panel, -1)[:, :store.b] + np.eye(panel.shape[0], store.b)
+            vt_store[k] = (jnp.asarray(V), jnp.asarray(T))
+            # write back: R on/above the diagonal of the top tile, zeros below
+            store[(k, k)] = jnp.asarray(np.triu(panel[:store.b]))
+            for i in range(k + 1, store.nb):
+                store[(i, k)] = jnp.zeros_like(store[(i, k)])
+        return fn
+
+    def col_body(j: int, k: int):
+        def fn(ctx):
+            V, T = vt_store[k]
+            a = jnp.concatenate([store[(i, j)] for i in range(k, store.nb)], axis=0)
+            a = a - V @ (T.T @ (V.T @ a))
+            for idx, i in enumerate(range(k, store.nb)):
+                store[(i, j)] = a[idx * store.b:(idx + 1) * store.b]
+        return fn if numeric else None
+
+    def col_cost(k: int) -> float:
+        return 4.0 * (nb - k) * b ** 3 / cm.flop_rate
+
+    join_look = None
+    join_trail = None
+
+    for k in range(nb):
+        m_tiles = nb - k
+        n_threads = max(1, min(panel_threads, m_tiles))
+        pdeps = [join_look] if join_look is not None else []
+        if numeric:
+            p = g.add(panel_body_factory(k, n_threads), name=f"panel[{k}]",
+                      kind="panel", cost=cm.panel_qr(m_tiles, b), priority=3,
+                      deps=pdeps, step=k)
+        else:
+            p = g.add(None, name=f"panel[{k}]", kind="panel",
+                      cost=0.05 * cm.panel_qr(m_tiles, b), priority=3, deps=pdeps,
+                      parallel=ParallelSpec(
+                          n_threads=n_threads,
+                          cost_per_thread=cm.panel_qr(m_tiles, b) / n_threads,
+                          n_barriers=4 * b, blocking=True),
+                      step=k)
+
+        col_dep = p
+        if comm:
+            col_dep = g.add(noop, name=f"bcast[{k}]", kind="comm",
+                            cost=cm.bcast(m_tiles + 1, b, ranks), priority=3,
+                            deps=[p], step=k)
+        base_deps = [col_dep] + ([join_trail] if join_trail is not None else [])
+
+        if k + 1 < nb:
+            join_look = g.add(col_body(k + 1, k), name=f"col[{k + 1},{k}]",
+                              kind="lookahead", cost=col_cost(k), priority=2,
+                              deps=base_deps, step=k)
+        else:
+            join_look = None
+
+        if k + 2 < nb:
+            tparent = g.add(noop, name=f"trail*[{k}]", kind="compute",
+                            cost=SPAWN_COST * (nb - k - 2), priority=0,
+                            deps=base_deps, step=k)
+            tchildren = [
+                g.add(col_body(j, k), name=f"col[{j},{k}]", kind="compute",
+                      cost=col_cost(k), priority=0, deps=[tparent], step=k)
+                for j in range(k + 2, nb)
+            ]
+            join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",
+                               cost=0.0, priority=0, deps=tchildren, step=k)
+        else:
+            join_trail = None
+    return g
+
+
+def qr_extract_r(store: TileStore) -> jnp.ndarray:
+    return jnp.triu(store.assemble())
+
+
+def qr_reconstruct(store: TileStore) -> jnp.ndarray:
+    """Apply the stored panel transforms to R to reconstruct A = Q R:
+    A = H_0 H_1 ... H_{nb-1} R with H_k = I - V_k T_k V_k^T acting on the
+    trailing rows."""
+    n = store.nb * store.b
+    a = np.array(qr_extract_r(store))  # writable copy
+    for k in reversed(range(store.nb)):
+        V, T = (np.asarray(x) for x in store.vt_store[k])
+        rows = slice(k * store.b, n)
+        blk = a[rows]
+        a[rows] = blk - V @ (T @ (V.T @ blk))
+    return jnp.asarray(a)

@@ -1,0 +1,31 @@
+"""LM substrate: configs, layers, SSD, and the unified model assembly."""
+
+from .config import ModelConfig
+from .lm import (
+    abstract_params,
+    cache_pspecs,
+    cache_struct,
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    model_spec,
+    param_pspecs,
+    prefill,
+    zeros_cache,
+)
+
+__all__ = [
+    "ModelConfig",
+    "abstract_params",
+    "cache_pspecs",
+    "cache_struct",
+    "decode_step",
+    "forward",
+    "init_params",
+    "loss_fn",
+    "model_spec",
+    "param_pspecs",
+    "prefill",
+    "zeros_cache",
+]

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD — state-space duality) block, chunked for training/prefill
+and recurrent for decode.
+
+Layout: x (B, T, D) -> in-projections (separate z/x/BC/dt projections so TP
+sharding stays clean — the fused in_proj of the reference implementation is
+split; same math, documented in DESIGN.md):
+
+* z  (B,T,di)         gate branch            [di = expand*D, sharded "model"]
+* xs (B,T,di)         conv -> SSD input (heads H = di/P, P = head_dim)
+* B,C (B,T,N)         state in/out projections (replicated; single group)
+* dt (B,T,H)          per-head step size
+
+SSD chunked algorithm (Dao & Gu 2024): split T into chunks of L; within a
+chunk the recurrence is materialized as a masked decay "attention"; across
+chunks a (B,H,N,P) state is carried by a scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import Params, Spec, rmsnorm
+
+
+def ssm_spec(cfg) -> Spec:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.conv_width
+    return {
+        "wz": ((d, di), ("embed", "ssm_inner")),
+        "wx": ((d, di), ("embed", "ssm_inner")),
+        "wb": ((d, n), ("embed", "state")),
+        "wc": ((d, n), ("embed", "state")),
+        "wdt": ((d, h), ("embed", "ssm_inner")),
+        "dt_bias": ((h,), ("ssm_inner",)),
+        "a_log": ((h,), ("ssm_inner",)),
+        "d_skip": ((h,), ("ssm_inner",)),
+        "conv_x": ((w, di), (None, "ssm_inner")),
+        "conv_b": ((w, n), (None, "state")),
+        "conv_c": ((w, n), (None, "state")),
+        "norm": ((di,), ("ssm_inner",)),
+        "wo": ((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B,T,C), w: (W,C).  Returns (y, new_state)
+    with state = last W-1 inputs (for decode continuation)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)           # (B, T+W-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + x.shape[1]] * w[i]
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(xs, dt, a, Bm, Cm, *, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None):
+    """SSD scan. xs: (B,T,H,P); dt: (B,T,H); a: (H,) (negative);
+    Bm/Cm: (B,T,N).  Returns (y (B,T,H,P), final_state (B,H,N,P))."""
+    Bsz, T, H, P = xs.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    nc = -(-T // L)
+    pad = nc * L - T
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xs = xs.reshape(Bsz, nc, L, H, P)
+    dt = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, L, N)
+    Cm = Cm.reshape(Bsz, nc, L, N)
+
+    la = dt * a                                   # log-decay per step (B,c,L,H)
+    cs = jnp.cumsum(la, axis=2)                   # within-chunk cumulative
+    seg_end = cs[:, :, -1, :]                     # (B,c,H) total chunk decay
+
+    # ---- intra-chunk (masked decay attention) -----------------------------
+    # decay(i,j) = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,c,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))                   # (B,c,L,L)
+    xdt = xs.astype(jnp.float32) * dt[..., None]              # (B,c,L,H,P)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # ---- chunk states ------------------------------------------------------
+    # state contribution of chunk c: sum_j exp(seg_end - cs_j) * dt_j B_j x_j
+    w_end = jnp.exp(seg_end[:, :, None, :] - cs)              # (B,c,L,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bm.astype(jnp.float32),
+                        w_end * dt, xs.astype(jnp.float32))   # (B,c,H,N,P)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    def step(carry, inp):
+        s_prev = carry                                        # (B,H,N,P)
+        st, dec = inp                                         # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(dec)[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bsz, H, N, P), jnp.float32))
+    final, s_prevs = lax.scan(step,
+                              s0,
+                              (states.transpose(1, 0, 2, 3, 4),
+                               seg_end.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # (B,c,H,N,P)
+
+    # y_inter_i = (C_i . S_prev) * exp(cs_i)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cm.astype(jnp.float32),
+                         s_prevs, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(Bsz, nc * L, H, P)[:, :T]
+    return y, final
+
+
+def ssm_block(p: Params, cfg, x: jnp.ndarray, *,
+              state: Optional[Dict[str, jnp.ndarray]] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba2 block.  Training/prefill: state=None -> (y, final_state).
+    Decode: state={'ssm','conv_x','conv_b','conv_c'} -> one-step update."""
+    B, T, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    bm = x @ p["wb"]
+    cm = x @ p["wc"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    cs_x = state["conv_x"] if state else None
+    cs_b = state["conv_b"] if state else None
+    cs_c = state["conv_c"] if state else None
+    xs, ns_x = _causal_conv(xs, p["conv_x"], cs_x)
+    bm, ns_b = _causal_conv(bm, p["conv_b"], cs_b)
+    cm, ns_c = _causal_conv(cm, p["conv_c"], cs_c)
+    xs, bm, cm = jax.nn.silu(xs), jax.nn.silu(bm), jax.nn.silu(cm)
+    xs_h = xs.reshape(B, T, H, P)
+
+    if state is None:
+        y, final = ssd_chunked(xs_h, dt, a, bm, cm, chunk=cfg.ssm_chunk)
+        new_state = {"ssm": final, "conv_x": ns_x, "conv_b": ns_b, "conv_c": ns_c}
+    else:
+        # single-step recurrence (T == 1)
+        s = state["ssm"].astype(jnp.float32)                  # (B,H,N,P)
+        dt1 = dt[:, 0]                                        # (B,H)
+        dec = jnp.exp(dt1 * a)                                # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bm[:, 0].astype(jnp.float32),
+                         dt1, xs_h[:, 0].astype(jnp.float32))
+        s = s * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32), s)[:, None]
+        new_state = {"ssm": s, "conv_x": ns_x, "conv_b": ns_b, "conv_c": ns_c}
+
+    y = y + xs_h.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, T, H * P)
+    y = rmsnorm(y.astype(x.dtype), p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["wo"], new_state
+
+
+def ssm_state_spec(cfg, batch: int, dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    H, P, N, W = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_width
+    di = cfg.d_inner
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, H, N, P), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, W - 1, di), dtype),
+        "conv_b": jax.ShapeDtypeStruct((batch, W - 1, N), dtype),
+        "conv_c": jax.ShapeDtypeStruct((batch, W - 1, N), dtype),
+    }

@@ -1,0 +1,3 @@
+from .rules import ShardCtx, logical_to_pspec, params_pspecs
+
+__all__ = ["ShardCtx", "logical_to_pspec", "params_pspecs"]

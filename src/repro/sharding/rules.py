@@ -1,0 +1,114 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / SP).
+
+Meshes
+------
+* single-pod: ``(data=16, model=16)``
+* multi-pod:  ``(pod=2, data=16, model=16)`` — ``pod`` is an outer
+  data-parallel axis (gradients cross pods once per step).
+
+Rules (Megatron TP + EP + optional SP):
+
+====================  =========================
+logical axis          mesh axes
+====================  =========================
+batch                 ("pod", "data")  /  ("data",)
+vocab / heads / ff /
+experts / kv_heads*   "model"
+embed / seq / state   unsharded (seq shards on "data" for long-context KV)
+layers                unsharded (scan axis)
+====================  =========================
+
+``kv_heads`` falls back to replication when ``n_kv_heads < |model|`` (GQA
+with tp > kv: standard KV replication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Everything the model code needs to know about distribution."""
+
+    mesh: Optional[Mesh]
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ("data",)
+    pod_axis: Optional[str] = None
+    shard_kv: bool = True            # False => replicate KV heads (GQA tp>kv)
+    seq_shard_cache: bool = False    # True => KV cache seq dim on data axes
+    fsdp: bool = True                # shard d_model param dims over data axes
+                                     # (ZeRO-3-via-GSPMD: per-layer all-gather)
+    remat_group: int = 1             # 2-level remat: checkpoint every k layers
+    moe_wire_bf16: bool = False      # MoE EP combine (psum) in bf16
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return ((self.pod_axis,) if self.pod_axis else ()) + tuple(self.data_axes)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.mesh else 1
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def rules(self) -> Dict[str, Any]:
+        batch = self.batch_axes if self.mesh else ()
+        return {
+            "batch": batch if batch else None,
+            "seq": None,
+            # param d_model dims shard over the batch axes under FSDP
+            # (GSPMD inserts the per-layer all-gather); activations' embed
+            # dim stays unsharded (Megatron TP).
+            "embed": self.batch_axes if (self.fsdp and self.mesh) else None,
+            "heads": self.model_axis,
+            "kv_heads": self.model_axis if self.shard_kv else None,
+            "ff": self.model_axis,
+            "vocab": self.model_axis,
+            "experts": self.model_axis,
+            "ssm_inner": self.model_axis,
+            "state": None,
+            "layers": None,
+            None: None,
+        }
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...], ctx: ShardCtx) -> P:
+    r = ctx.rules()
+    return P(*[r.get(a) for a in axes])
+
+
+def params_pspecs(spec_axes_tree, ctx: ShardCtx):
+    """Map a logical-axes tree (from layers.spec_axes) to PartitionSpecs."""
+    if isinstance(spec_axes_tree, dict):
+        return {k: params_pspecs(v, ctx) for k, v in spec_axes_tree.items()}
+    return logical_to_pspec(tuple(spec_axes_tree), ctx)
+
+
+def named(tree_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_ctx(mesh: Optional[Mesh], cfg=None) -> ShardCtx:
+    """Build a ShardCtx from a mesh, adapting rules to the config (KV
+    replication when GQA heads < model size)."""
+    if mesh is None:
+        return ShardCtx(mesh=None)
+    axis_names = mesh.axis_names
+    pod = "pod" if "pod" in axis_names else None
+    shard_kv = True
+    if cfg is not None and getattr(cfg, "n_kv_heads", 0):
+        shard_kv = cfg.n_kv_heads % mesh.shape["model"] == 0
+    return ShardCtx(mesh=mesh, pod_axis=pod, data_axes=("data",), shard_kv=shard_kv)

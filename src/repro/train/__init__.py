@@ -1,0 +1,4 @@
+from .steps import make_eval_step, make_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "make_eval_step", "make_train_step"]

@@ -1,0 +1,261 @@
+"""Unit tests for the core scheduler: task graphs, policies, gang logic,
+simulator semantics, static schedule extraction."""
+
+import pytest
+
+from repro.core import (
+    DeadlockError,
+    GangState,
+    HybridPolicy,
+    ListScheduler,
+    ParallelSpec,
+    Simulator,
+    TaskGraph,
+    is_eligible_to_sched,
+    make_policy,
+    microbatch_overlap_graph,
+    simulate,
+)
+
+
+# ---------------------------------------------------------------------------
+# TaskGraph
+# ---------------------------------------------------------------------------
+def diamond() -> TaskGraph:
+    g = TaskGraph("diamond")
+    a = g.add(name="a", cost=1.0)
+    b = g.add(name="b", deps=[a], cost=2.0)
+    c = g.add(name="c", deps=[a], cost=3.0)
+    g.add(name="d", deps=[b, c], cost=1.0)
+    return g
+
+
+def test_taskgraph_topology():
+    g = diamond()
+    order = [t.name for t in g.topological_order()]
+    assert order.index("a") < order.index("b") < order.index("d")
+    assert order.index("a") < order.index("c") < order.index("d")
+    assert [t.name for t in g.roots()] == ["a"]
+    assert sorted(s.name for s in g.successors(0)) == ["b", "c"]
+
+
+def test_taskgraph_critical_path():
+    g = diamond()
+    length, path = g.critical_path()
+    assert length == pytest.approx(1.0 + 3.0 + 1.0)
+    assert [t.name for t in path] == ["a", "c", "d"]
+    assert g.total_work() == pytest.approx(7.0)
+
+
+def test_taskgraph_rejects_forward_dep():
+    g = TaskGraph()
+    with pytest.raises(ValueError):
+        g.add(name="x", deps=[5])
+
+
+# ---------------------------------------------------------------------------
+# Victim policies (Algorithm 2)
+# ---------------------------------------------------------------------------
+def test_hybrid_policy_alternates_after_success():
+    p = HybridPolicy(worker_id=0, n_workers=8, seed=1)
+    # first select: empty history => random
+    v1 = p.select()
+    assert v1 != 0
+    p.record(v1, True)           # success: slot <- v1, cursor advances
+    v2 = p.select()              # fresh slot => random probe
+    p.record(v2, False)          # failure: cursor retreats
+    v3 = p.select()              # back on the successful slot => history
+    assert v3 == v1
+
+
+def test_history_policy_sticks_to_victim():
+    p = make_policy("history", 0, 8, seed=0)
+    v = p.select()
+    p.record(v, True)
+    assert p.select() == v
+    p.record(v, True)
+    assert p.select() == v
+    p.record(v, False)
+    # after failure, the victim is dropped
+    assert p.last_victim == -1
+
+
+def test_random_policy_never_self():
+    p = make_policy("random", 3, 4, seed=7)
+    for _ in range(100):
+        assert p.select() != 3
+
+
+# ---------------------------------------------------------------------------
+# Gang logic (Algorithm 1)
+# ---------------------------------------------------------------------------
+def test_get_workers_prefers_neighbors_and_balance():
+    gs = GangState(8)
+    r = gs.get_workers(cur_worker_id=2, n_request=3)
+    assert r == [3, 4, 5]          # adjacent to spawner
+    gs.account_gang(r)
+    r2 = gs.get_workers(cur_worker_id=2, n_request=3)
+    # loaded workers 3,4,5 are above average now; selection skips them
+    assert set(r2).isdisjoint({3, 4, 5})
+    assert len(r2) == 3
+
+
+def test_get_workers_wraps_near_top():
+    gs = GangState(8)
+    r = gs.get_workers(cur_worker_id=7, n_request=4)
+    assert len(r) == 4
+    assert len(set(r)) == 4
+
+
+def test_eligibility_predicate():
+    # idle worker takes anything
+    assert is_eligible_to_sched(5, 1, -1, 0)
+    # deeper regions always eligible
+    assert is_eligible_to_sched(9, 2, 3, 1)
+    # same level, same gang: eligible
+    assert is_eligible_to_sched(3, 1, 3, 1)
+    # same level, different gang: NOT eligible (deadlock hazard)
+    assert not is_eligible_to_sched(4, 1, 3, 1)
+    # shallower level: NOT eligible
+    assert not is_eligible_to_sched(2, 0, 3, 1)
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+def test_simulator_serial_graph_makespan():
+    g = TaskGraph("chain")
+    prev = None
+    for i in range(5):
+        prev = g.add(name=f"t{i}", cost=1.0, deps=[prev] if prev else [])
+    tr = simulate(g, 4, policy="hybrid", mode="gang", seed=0)
+    assert tr.makespan == pytest.approx(5.0, rel=1e-3)
+
+
+def test_simulator_parallel_speedup():
+    g = TaskGraph("wide")
+    for i in range(16):
+        g.add(name=f"t{i}", cost=1.0)
+    tr1 = simulate(g, 1, seed=0)
+    tr4 = simulate(g, 4, seed=0)
+    assert tr1.makespan == pytest.approx(16.0, rel=1e-3)
+    assert tr4.makespan < 16.0 / 4 + 1.0     # near-linear scaling
+
+
+def test_simulator_all_policies_complete():
+    g = diamond()
+    for pol in ("history", "random", "hybrid"):
+        tr = simulate(g, 4, policy=pol, seed=1)
+        assert tr.makespan >= 5.0  # critical path bound
+
+
+def test_simulator_gang_region_completes():
+    g = TaskGraph("gangy")
+    g.add(name="p", cost=0.1,
+          parallel=ParallelSpec(n_threads=4, cost_per_thread=1.0, n_barriers=4))
+    tr = simulate(g, 8, mode="gang", seed=0)
+    # 4 threads of 1.0s work on distinct reserved workers: ~1.0s + overheads
+    assert tr.makespan < 1.5
+
+
+def test_simulator_naive_ult_deadlocks_fig1():
+    """Paper Fig. 1(a): more blocking ULTs than workers, no gang
+    coordination => deadlock (detected, not hung)."""
+    g = TaskGraph("fig1")
+    g.add(name="region", cost=0.01,
+          parallel=ParallelSpec(n_threads=8, cost_per_thread=0.1, n_barriers=2,
+                                blocking=True))
+    with pytest.raises(DeadlockError):
+        simulate(g, 4, mode="ult_naive", seed=0)
+
+
+def test_simulator_gang_mode_handles_fig1_when_it_fits():
+    g = TaskGraph("fig1-fits")
+    g.add(name="region", cost=0.01,
+          parallel=ParallelSpec(n_threads=4, cost_per_thread=0.1, n_barriers=2,
+                                blocking=True))
+    tr = simulate(g, 4, mode="gang", seed=0)
+    assert tr.makespan < 0.5
+
+
+def test_simulator_two_gangs_no_deadlock():
+    """Two concurrent gangs contending for the same workers complete under
+    the monotonic-gang-id ordering."""
+    g = TaskGraph("two-gangs")
+    g.add(name="r1", cost=0.01,
+          parallel=ParallelSpec(n_threads=3, cost_per_thread=0.2, n_barriers=3))
+    g.add(name="r2", cost=0.01,
+          parallel=ParallelSpec(n_threads=3, cost_per_thread=0.2, n_barriers=3))
+    tr = simulate(g, 4, mode="gang", seed=0)
+    assert tr.makespan < 1.0
+
+
+def test_simulator_oversubscribe_slower_than_gang():
+    """The paper's core claim: oversubscribed nested regions are slower than
+    gang-scheduled ones (context switching + interference)."""
+    def graph():
+        # 4 cores saturated with trailing work while 4-thread panel regions
+        # (barrier-heavy) fork — the SLATE LU/QR pattern at paper scale.
+        g = TaskGraph("nested")
+        prev = None
+        for i in range(6):
+            t = g.add(name=f"panel{i}", kind="panel", cost=0.01,
+                      deps=[prev] if prev else [],
+                      parallel=ParallelSpec(n_threads=4, cost_per_thread=0.06,
+                                            n_barriers=12))
+            # trailing work that keeps every core busy into the next panel
+            for j in range(8):
+                g.add(name=f"tr{i}.{j}", kind="compute", cost=0.03, deps=[t])
+            prev = t
+        return g
+
+    gang = simulate(graph(), 4, mode="gang", seed=0).makespan
+    over = simulate(graph(), 4, mode="oversubscribe", seed=0).makespan
+    assert gang < over
+
+
+def test_simulator_deterministic():
+    g = diamond()
+    t1 = simulate(g, 4, policy="hybrid", seed=42).makespan
+    t2 = simulate(g, 4, policy="hybrid", seed=42).makespan
+    assert t1 == t2
+
+
+# ---------------------------------------------------------------------------
+# Static schedules
+# ---------------------------------------------------------------------------
+def test_static_schedule_covers_all_tasks():
+    g = diamond()
+    sched = ListScheduler(4, policy="hybrid").schedule(g)
+    assert {it.tid for it in sched.items} == {t.tid for t in g}
+    assert sched.makespan >= 5.0
+
+
+def test_static_schedule_waves_respect_deps():
+    g = diamond()
+    sched = ListScheduler(2, policy="hybrid").schedule(g)
+    waves = sched.waves()
+    pos = {}
+    for i, wave in enumerate(waves):
+        for tid in wave:
+            pos[tid] = i
+    for t in g:
+        for d in t.deps:
+            assert pos[d] <= pos[t.tid]
+
+
+def test_microbatch_overlap_hybrid_beats_history():
+    """Fig. 2: hybrid victim selection overlaps per-microbatch all-reduce
+    with the next microbatch's compute; history serializes them."""
+    g = microbatch_overlap_graph(8, compute_cost=1.0, comm_cost=0.5)
+    hist = ListScheduler(2, policy="history", seed=0).schedule(g)
+    hyb = ListScheduler(2, policy="hybrid", seed=0).schedule(g)
+    assert hyb.makespan <= hist.makespan + 1e-9
+    assert hyb.overlap_fraction() >= hist.overlap_fraction() - 1e-9
+
+
+def test_collective_order_is_deterministic():
+    g = microbatch_overlap_graph(4)
+    s1 = ListScheduler(2, policy="hybrid", seed=3).schedule(g).collective_order()
+    s2 = ListScheduler(2, policy="hybrid", seed=3).schedule(g).collective_order()
+    assert s1 == s2

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the scheduler's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GangState,
+    ListScheduler,
+    Simulator,
+    TaskGraph,
+    is_eligible_to_sched,
+    make_policy,
+)
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# random DAG generator
+# ---------------------------------------------------------------------------
+@st.composite
+def dags(draw, max_tasks=40):
+    n = draw(st.integers(min_value=1, max_value=max_tasks))
+    g = TaskGraph("prop")
+    kinds = ["compute", "comm", "panel", "lookahead"]
+    for i in range(n):
+        n_deps = draw(st.integers(min_value=0, max_value=min(i, 4)))
+        deps = sorted(draw(st.sets(st.integers(min_value=0, max_value=i - 1),
+                                   min_size=n_deps, max_size=n_deps))) if i else []
+        g.add(name=f"t{i}",
+              kind=draw(st.sampled_from(kinds)),
+              cost=draw(st.floats(min_value=1e-5, max_value=1e-2)),
+              priority=draw(st.integers(min_value=0, max_value=3)),
+              deps=list(deps))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+@given(dags(), st.integers(min_value=1, max_value=8),
+       st.sampled_from(["history", "random", "hybrid"]),
+       st.integers(min_value=0, max_value=5))
+def test_simulator_executes_every_task_exactly_once(g, workers, policy, seed):
+    sim = Simulator(workers, policy=policy, seed=seed)
+    tr = sim.run(g)
+    names = [e.label for e in tr.events if e.label.startswith("t")]
+    assert sorted(names) == sorted(t.name for t in g)
+
+
+@given(dags(), st.integers(min_value=1, max_value=8),
+       st.sampled_from(["history", "random", "hybrid"]),
+       st.integers(min_value=0, max_value=5))
+def test_simulator_respects_dependencies(g, workers, policy, seed):
+    tr = Simulator(workers, policy=policy, seed=seed).run(g)
+    start = {}
+    end = {}
+    for e in tr.events:
+        if e.label in start:
+            start[e.label] = min(start[e.label], e.t0)
+            end[e.label] = max(end[e.label], e.t1)
+        else:
+            start[e.label], end[e.label] = e.t0, e.t1
+    for t in g:
+        for d in t.deps:
+            dn = g.tasks[d].name
+            assert end[dn] <= start[t.name] + 1e-9, \
+                f"{t.name} started before dep {dn} finished"
+
+
+@given(dags(), st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=3))
+def test_makespan_bounds(g, workers, seed):
+    """critical path <= makespan <= total work + overheads."""
+    tr = Simulator(workers, policy="hybrid", seed=seed,
+                   locality_penalty=0.0).run(g)
+    cp, _ = g.critical_path()
+    total = g.total_work()
+    overhead = 1e-3 * (len(g) + 10)
+    assert tr.makespan >= cp - 1e-9
+    assert tr.makespan <= total + overhead
+
+
+@given(dags(), st.integers(min_value=2, max_value=6))
+def test_static_schedule_is_valid(g, slots):
+    sched = ListScheduler(slots, policy="hybrid").schedule(g)
+    # every task appears exactly once
+    assert sorted(i.tid for i in sched.items) == sorted(t.tid for t in g)
+    # no slot runs two tasks at once
+    by_slot = sched.order
+    for slot, items in by_slot.items():
+        for a, b in zip(items, items[1:]):
+            assert a.t1 <= b.t0 + 1e-9
+    # dependencies respected in time
+    tmap = {i.tid: i for i in sched.items}
+    for t in g:
+        for d in t.deps:
+            assert tmap[d].t1 <= tmap[t.tid].t0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# gang logic invariants
+# ---------------------------------------------------------------------------
+@given(st.integers(min_value=1, max_value=64), st.integers(min_value=0, max_value=63),
+       st.integers(min_value=1, max_value=64))
+def test_get_workers_returns_distinct_valid_workers(n_workers, cur, n_request):
+    cur = cur % n_workers
+    gs = GangState(n_workers)
+    r = gs.get_workers(cur, n_request)
+    assert len(r) == min(n_request, n_workers)
+    assert len(set(r)) == len(r)
+    assert all(0 <= w < n_workers for w in r)
+
+
+@given(st.integers(min_value=-1, max_value=10), st.integers(min_value=0, max_value=5),
+       st.integers(min_value=-1, max_value=10), st.integers(min_value=0, max_value=5))
+def test_eligibility_is_antisymmetric_across_gangs(g1, l1, g2, l2):
+    """Two workers in different gangs at the same nest level can never both
+    steal each other's ULTs (the cycle that causes deadlock)."""
+    if g1 < 0 or g2 < 0 or g1 == g2:
+        return
+    both = (is_eligible_to_sched(g1, l1, g2, l2) and
+            is_eligible_to_sched(g2, l2, g1, l1))
+    if l1 == l2:
+        assert not both
+
+
+@given(st.sampled_from(["history", "random", "hybrid"]),
+       st.integers(min_value=2, max_value=16),
+       st.integers(min_value=0, max_value=10))
+def test_policies_never_select_self(policy, n_workers, seed):
+    p = make_policy(policy, 0, n_workers, seed)
+    for i in range(50):
+        v = p.select()
+        assert v != 0
+        assert 0 <= v < n_workers
+        p.record(v, i % 3 == 0)

@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the paper's system: full factorizations
+through the gang-scheduling/work-stealing runtime and the paper's headline
+claims reproduced in the rank-aware simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import DeadlockError, ParallelSpec, Simulator, TaskGraph, run_graph, simulate
+from repro.linalg import (
+    build_cholesky_graph,
+    cholesky_extract,
+    random_spd,
+    to_tiles,
+)
+from repro.linalg.dist import build_dist_cholesky_graph, build_dist_panel_graph
+from repro.linalg.tiles import CostModel
+
+
+def test_end_to_end_cholesky_through_runtime():
+    """Factor a real SPD matrix through the full runtime (hybrid policy,
+    gang default) and validate numerics."""
+    a = random_spd(192, seed=11)
+    store = to_tiles(a, 48)
+    g = build_cholesky_graph(store.nb, 48, store=store)
+    run_graph(g, 4, policy="hybrid", timeout=120.0)
+    l = cholesky_extract(store)
+    np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(a), rtol=1e-8, atol=1e-8)
+
+
+def test_paper_claim_gang_beats_oversubscription_lu():
+    """Paper §5.2/Fig 7: gang-scheduled LU panels beat the oversubscribed
+    baseline."""
+    g1 = build_dist_panel_graph("lu", 24, 192, ranks=2)
+    gang = Simulator(16, ranks=2, mode="gang", policy="hybrid", seed=0).run(g1).makespan
+    over = Simulator(16, ranks=2, mode="oversubscribe", policy="hybrid", seed=0).run(g1).makespan
+    assert gang < over
+
+
+def test_paper_claim_hybrid_wins_cholesky():
+    """Paper §5.4/Fig 11: hybrid victim selection gives a double-digit
+    improvement on distributed Cholesky."""
+    cm = CostModel(comm_bw=3e9, comm_latency=20e-6)
+    g = build_dist_cholesky_graph(64, 192, ranks=4, cost=cm)
+    hist = Simulator(40, ranks=4, policy="history", seed=0).run(g).makespan
+    hyb = Simulator(40, ranks=4, policy="hybrid", seed=0).run(g).makespan
+    assert (hist - hyb) / hist > 0.10
+
+
+def test_paper_claim_deadlock_freedom():
+    """Paper Fig 1: naive ULT scheduling deadlocks where gang scheduling
+    completes — same workload, both modes."""
+    def graph():
+        g = TaskGraph("fig1")
+        g.add(name="region", cost=0.01,
+              parallel=ParallelSpec(n_threads=4, cost_per_thread=0.1,
+                                    n_barriers=4, blocking=True))
+        return g
+
+    with pytest.raises(DeadlockError):
+        simulate(graph(), 2, mode="ult_naive", seed=0)   # 4 ULTs on 2 workers
+    tr = simulate(graph(), 4, mode="gang", seed=0)
+    assert tr.makespan < 1.0
