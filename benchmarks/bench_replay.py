@@ -1,0 +1,158 @@
+"""Dynamic-vs-replay overhead benchmark (the record-and-replay subsystem).
+
+Two measurements over the nb=8 tiled-Cholesky graph shape, across worker
+counts and victim policies:
+
+* ``sched_overhead`` — task bodies are no-ops, so per-iteration wall clock
+  *is* scheduling overhead.  Replay walks preallocated run lists with
+  per-task locks; the dynamic runtime pays queues + global indegree lock +
+  victim selection.  Replay must win where stealing overhead dominates
+  (1-2 workers).
+* ``numeric`` — real tile bodies (JAX CPU ops), driven through a
+  :class:`~repro.replay.GraphCache` exactly like an iterative sweep:
+  iteration 1 records, every later iteration replays.
+
+Emits CSV rows (benchmarks.common schema) and writes ``BENCH_replay.json``
+(list of the same row dicts + meta) for machine consumption.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.core import Runtime
+from repro.linalg import build_cholesky_graph, cholesky_extract, random_spd, to_tiles
+from repro.replay import GraphCache, ReplayExecutor
+
+NB = 8
+B = 64
+WORKERS = (1, 2, 4)
+POLICIES = ("hybrid", "history")
+JSON_PATH = os.environ.get("BENCH_REPLAY_JSON", "BENCH_replay.json")
+
+
+def _noop_graph() -> object:
+    g = build_cholesky_graph(NB, B)
+    for t in g.tasks:
+        t.fn = lambda ctx: None
+    return g
+
+
+def bench_overhead(workers: int, policy: str, iters: int = 30,
+                   repeats: int = 3) -> Dict:
+    """Best-of-``repeats`` mean per-iteration wall clock, noop bodies."""
+    dyn_best = rep_best = float("inf")
+    rt = Runtime(workers, policy=policy)
+    with rt:
+        rt.run(_noop_graph())                         # warm the pool
+        for _ in range(repeats):
+            graphs = [_noop_graph() for _ in range(iters)]
+            t0 = time.perf_counter()
+            for g in graphs:
+                rt.run(g)
+            dyn_best = min(dyn_best, (time.perf_counter() - t0) / iters)
+        rt.run(_noop_graph(), record=True)
+        rec = rt.last_recording
+    ex = ReplayExecutor(rec)
+    with ex:
+        ex.run(_noop_graph())
+        for _ in range(repeats):
+            graphs = [_noop_graph() for _ in range(iters)]
+            t0 = time.perf_counter()
+            for g in graphs:
+                ex.run(g)
+            rep_best = min(rep_best, (time.perf_counter() - t0) / iters)
+    return {
+        "bench": "sched_overhead", "kernel": "cholesky", "nb": NB,
+        "workers": workers, "policy": policy,
+        "dynamic_ms": round(dyn_best * 1e3, 4),
+        "replay_ms": round(rep_best * 1e3, 4),
+        "speedup": round(dyn_best / rep_best, 3),
+    }
+
+
+def bench_numeric(workers: int, policy: str, iters: int = 8) -> Dict:
+    """Numeric sweep: iteration 1 records into a GraphCache, the rest replay
+    on a persistent executor (a real sweep keeps both pools warm)."""
+    a = random_spd(NB * B, seed=0)
+    cache = GraphCache()
+    dyn_times: List[float] = []
+    rep_times: List[float] = []
+    # dynamic baseline: persistent runtime
+    rt = Runtime(workers, policy=policy)
+    with rt:
+        for _ in range(iters):
+            st = to_tiles(a, B)
+            g = build_cholesky_graph(NB, B, store=st)
+            t0 = time.perf_counter()
+            rt.run(g)
+            cholesky_extract(st).block_until_ready()
+            dyn_times.append(time.perf_counter() - t0)
+        # iteration 1 of the cached sweep: dynamic + record
+        st = to_tiles(a, B)
+        g = build_cholesky_graph(NB, B, store=st)
+        t0 = time.perf_counter()
+        rt.run(g, record=True)
+        cache.store(rt.last_recording)
+        record_s = time.perf_counter() - t0
+    # iterations 2..n: replay from the cache on a persistent executor
+    rec = cache.lookup(g, workers, policy)
+    ex = ReplayExecutor(rec)
+    with ex:
+        for _ in range(iters):
+            st = to_tiles(a, B)
+            g = build_cholesky_graph(NB, B, store=st)
+            t0 = time.perf_counter()
+            ex.run(g)
+            cholesky_extract(st).block_until_ready()
+            rep_times.append(time.perf_counter() - t0)
+    dyn = min(dyn_times[1:])                 # drop the warmup iteration
+    rep = min(rep_times[1:])
+    return {
+        "bench": "numeric", "kernel": "cholesky", "nb": NB,
+        "workers": workers, "policy": policy,
+        "dynamic_ms": round(dyn * 1e3, 4),
+        "replay_ms": round(rep * 1e3, 4),
+        "record_ms": round((record_s or 0.0) * 1e3, 4),
+        "speedup": round(dyn / rep, 3),
+    }
+
+
+def bench(full: bool = True) -> List[Dict]:
+    rows: List[Dict] = []
+    for policy in POLICIES:
+        for w in WORKERS:
+            rows.append(bench_overhead(w, policy))
+    if full:
+        for w in WORKERS:
+            rows.append(bench_numeric(w, "hybrid"))
+    return rows
+
+
+def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
+    out = {
+        "bench": "replay",
+        "meta": {"nb": NB, "b": B, "workers": list(WORKERS),
+                 "policies": list(POLICIES)},
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=1)
+
+
+def main():
+    from .common import emit
+    rows = bench()
+    # separate CSV blocks (the numeric rows carry an extra record_ms column)
+    emit([r for r in rows if r["bench"] == "sched_overhead"])
+    print()
+    emit([r for r in rows if r["bench"] == "numeric"])
+    write_json(rows)
+    print(f"# wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -170,6 +170,16 @@ class Runtime:
         self._started = False
         self._work_available = threading.Condition()
 
+        # record-and-replay instrumentation (repro.replay); populated by
+        # run(record=True) — cold path, None otherwise
+        self._recording = False
+        self._rec_entries: List[List[Any]] = []
+        self._rec_steals: List[List[Tuple[int, Any]]] = []
+        self._rec_forks: List[Tuple[int, int, int]] = []
+        self._rec_comms: List[int] = []
+        self._rec_comm_lock = threading.Lock()
+        self.last_recording = None
+
     # ------------------------------------------------------------------
     # lifecycle
     def start(self) -> None:
@@ -201,9 +211,15 @@ class Runtime:
 
     # ------------------------------------------------------------------
     # graph execution
-    def run(self, graph: TaskGraph, timeout: float = 300.0) -> Dict[int, Any]:
+    def run(self, graph: TaskGraph, timeout: float = 300.0, *,
+            record: bool = False) -> Dict[int, Any]:
         """Execute the graph; returns {tid: result}.  Raises DeadlockError if
-        the Fig. 1 state is reached, or re-raises the first task failure."""
+        the Fig. 1 state is reached, or re-raises the first task failure.
+
+        With ``record=True`` the run is instrumented (per-worker execution
+        order, steals, gang placements and fork order) and a
+        :class:`repro.replay.Recording` is left in ``self.last_recording``
+        for the replay executor / graph cache."""
         graph.validate()
         if not self._started:
             self.start()
@@ -212,6 +228,12 @@ class Runtime:
         self._results = {}
         self._deadlock = None
         self._failure = None
+        self._recording = record
+        if record:
+            self._rec_entries = [[] for _ in range(self.n_workers)]
+            self._rec_steals = [[] for _ in range(self.n_workers)]
+            self._rec_forks = []
+            self._rec_comms = []
         with self._done_cv:
             self._remaining = len(graph)
         # master thread (worker 0's queue) receives the roots
@@ -233,7 +255,45 @@ class Runtime:
                             f"({self._remaining} tasks left)")
         if self._failure:
             raise self._failure
+        if record:
+            self.last_recording = self._build_recording(graph)
+            self._recording = False
         return dict(self._results)
+
+    def _build_recording(self, graph: TaskGraph):
+        """Assemble a replay Recording from the instrumentation buffers."""
+        from ..replay.recording import GangPlacement, Recording
+        from ..replay.graph_key import graph_key
+
+        placements: Dict[int, GangPlacement] = {}
+        for spawn_tid, gang_id, n_threads in self._rec_forks:
+            if spawn_tid in placements:
+                # recordings key regions by spawning task; two forks from one
+                # task would be indistinguishable on replay — refuse loudly
+                raise ValueError(
+                    f"task {spawn_tid} forked more than one parallel region; "
+                    "record-and-replay supports one region per task")
+            placements[spawn_tid] = GangPlacement(
+                spawn_tid, gang_id, [-1] * n_threads)
+        for w, entries in enumerate(self._rec_entries):
+            for e in entries:
+                if isinstance(e, tuple) and e[0] in placements:
+                    placements[e[0]].workers[e[1]] = w
+        steals = [(w, victim, e)
+                  for w, lst in enumerate(self._rec_steals)
+                  for victim, e in lst]
+        return Recording(
+            digest=graph_key(graph).digest,
+            graph_name=graph.name,
+            n_workers=self.n_workers,
+            policy=self.policy_name,
+            worker_orders=[list(e) for e in self._rec_entries],
+            gang_placements=placements,
+            gang_issue_order=[f[0] for f in self._rec_forks],
+            steals=steals,
+            collective_order=list(self._rec_comms),
+            source="dynamic",
+        )
 
     # ------------------------------------------------------------------
     # queues
@@ -310,6 +370,12 @@ class Runtime:
         pol.record(victim, got is not None)
         if got is None:
             return False
+        if self._recording:
+            entry = (got.region.spawn_task.tid, got.thread_num) \
+                if isinstance(got, _GangULT) and got.region.spawn_task is not None \
+                else (got.tid if not isinstance(got, _GangULT) else None)
+            if entry is not None:
+                self._rec_steals[w].append((victim, entry))
         if isinstance(got, _GangULT):
             self._run_gang_ult(w, got)
         else:
@@ -320,6 +386,12 @@ class Runtime:
     # task execution
     def _run_task(self, w: int, task: Task) -> None:
         t0 = time.perf_counter()
+        if self._recording:
+            # per-worker list, appended only by worker w: start order, no lock
+            self._rec_entries[w].append(task.tid)
+            if task.kind == "comm":
+                with self._rec_comm_lock:
+                    self._rec_comms.append(task.tid)
         ctx = TaskContext(self._graph, task, self._results, runtime=self)
         ctx.worker_id = w  # type: ignore[attr-defined]
         try:
@@ -383,10 +455,14 @@ class Runtime:
         nest_level = (ctx_stack[-1][1] if ctx_stack else 0) + 1
         spec = ParallelSpec(n_threads=n_threads, body=body, gang=use_gang)
 
+        spawn_task = spawn_ctx.task if spawn_ctx is not None else None
         with self._fork_lock:   # the paper's serialized fork phase
             gang_id = self.gang_state.next_gang_id() if use_gang else -1
             region = _Region(next(self._region_ids), gang_id, nest_level, spec, self,
-                             spawn_task=None)
+                             spawn_task=spawn_task)
+            if self._recording and spawn_task is not None:
+                # fork lock => globally ordered by gang id (issue order)
+                self._rec_forks.append((spawn_task.tid, gang_id, n_threads))
             if use_gang:
                 reserved = self.gang_state.get_workers(w, n_threads)
                 self.gang_state.account_gang([reserved[i % len(reserved)] for i in range(n_threads)])
@@ -418,6 +494,8 @@ class Runtime:
 
     def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
         region = ult.region
+        if self._recording and region.spawn_task is not None:
+            self._rec_entries[w].append((region.spawn_task.tid, ult.thread_num))
         self._contexts[w].append((region.gang_id, region.nest_level))
         t0 = time.perf_counter()
         try:
@@ -474,8 +552,45 @@ def run_graph(
     seed: int = 0,
     trace: bool = False,
     timeout: float = 300.0,
+    record: bool = False,
+    replay: Any = None,
+    cache: Any = None,
 ) -> Dict[int, Any]:
-    """Convenience: run a graph on a fresh runtime and shut it down."""
+    """Convenience: run a graph on a fresh runtime and shut it down.
+
+    Record-and-replay hooks (see :mod:`repro.replay`):
+
+    * ``replay`` — a :class:`~repro.replay.Recording`: skip the dynamic
+      scheduler entirely and replay the graph on a
+      :class:`~repro.replay.ReplayExecutor`;
+    * ``cache`` — a :class:`~repro.replay.GraphCache`: replay on a cache hit
+      for this (structure, ``n_workers``, ``policy``); on a miss, run
+      dynamically with recording on and store the recording, so the next
+      same-shaped call replays;
+    * ``record`` — instrument the dynamic run; the recording is returned via
+      ``run_graph.last_recording`` (also stored in ``cache`` when given).
+    """
+    if replay is not None:
+        from ..replay.executor import replay_graph
+        run_graph.last_recording = replay
+        return replay_graph(graph, replay, timeout=timeout)
+    if cache is not None:
+        rec = cache.lookup(graph, n_workers, policy)
+        if rec is not None:
+            from ..replay.executor import replay_graph
+            run_graph.last_recording = rec
+            # lookup already matched this graph's digest — skip re-hashing
+            # the structure on the hot path
+            return replay_graph(graph, rec, timeout=timeout,
+                                check_digest=False)
+        record = True
     rt = Runtime(n_workers, policy=policy, gang_default=gang_default, seed=seed, trace=trace)
     with rt:
-        return rt.run(graph, timeout=timeout)
+        results = rt.run(graph, timeout=timeout, record=record)
+    run_graph.last_recording = rt.last_recording
+    if cache is not None and rt.last_recording is not None:
+        cache.store(rt.last_recording)
+    return results
+
+
+run_graph.last_recording = None

@@ -2,10 +2,17 @@
 substrate: LU, QR (gang-scheduled multithreaded panels) and Cholesky
 (overlap-sensitive light panels)."""
 
-from .cholesky import build_cholesky_graph, cholesky_extract, random_spd, reference_cholesky
-from .lu import build_lu_graph, lu_extract, random_diagdom
-from .qr import build_qr_graph, qr_extract_r, qr_reconstruct
+from .cholesky import (build_cholesky_graph, cholesky_extract,
+                       cholesky_graph_key, random_spd, reference_cholesky)
+from .lu import build_lu_graph, lu_extract, lu_graph_key, random_diagdom
+from .qr import build_qr_graph, qr_extract_r, qr_graph_key, qr_reconstruct
 from .tiles import CostModel, TileStore, to_tiles
+
+GRAPH_KEYS = {
+    "cholesky": cholesky_graph_key,
+    "lu": lu_graph_key,
+    "qr": qr_graph_key,
+}
 
 KERNELS = {
     "cholesky": build_cholesky_graph,
@@ -22,14 +29,18 @@ def paper_graph(kernel: str, nb: int, b: int = 192, **kw):
 
 __all__ = [
     "CostModel",
+    "GRAPH_KEYS",
     "KERNELS",
     "TileStore",
     "build_cholesky_graph",
     "build_lu_graph",
     "build_qr_graph",
     "cholesky_extract",
+    "cholesky_graph_key",
     "lu_extract",
+    "lu_graph_key",
     "paper_graph",
+    "qr_graph_key",
     "qr_extract_r",
     "qr_reconstruct",
     "random_diagdom",

@@ -129,6 +129,25 @@ def build_cholesky_graph(
     return g
 
 
+def cholesky_graph_key(
+    nb: int,
+    b: int = 64,
+    *,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    comm: bool = True,
+):
+    """Structural replay-cache key for :func:`build_cholesky_graph`.
+
+    Computed from a body-less cost-model build (no tile store needed): the
+    key ignores callables, so it is identical to the key of a numeric build
+    with the same shape parameters — an iterative sweep keys its
+    :class:`~repro.replay.GraphCache` lookups on this and hits the recording
+    from step 1 on every later step."""
+    from ..replay import graph_key
+    return graph_key(build_cholesky_graph(nb, b, cost=cost, ranks=ranks, comm=comm))
+
+
 def cholesky_extract(store: TileStore) -> jnp.ndarray:
     """Assemble L (zeroing the strictly-upper tiles)."""
     return jnp.tril(store.assemble())

@@ -116,6 +116,25 @@ def build_lu_graph(
     return g
 
 
+def lu_graph_key(
+    nb: int,
+    b: int = 64,
+    *,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    comm: bool = True,
+):
+    """Structural replay-cache key for :func:`build_lu_graph`.  NOTE: numeric
+    and cost-model LU builds differ structurally (the cost-model panel is a
+    :class:`ParallelSpec` task, the numeric panel forks at run time), so
+    record numeric sweeps against a numeric build's key — this helper exists
+    for simulator/cost-model replay."""
+    from ..replay import graph_key
+    return graph_key(build_lu_graph(nb, b, cost=cost, ranks=ranks,
+                                    panel_threads=panel_threads, comm=comm))
+
+
 def lu_extract(store: TileStore):
     """Assemble (L_unit, U) from the packed in-place factorization."""
     a = store.assemble()

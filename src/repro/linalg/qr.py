@@ -119,6 +119,23 @@ def build_qr_graph(
     return g
 
 
+def qr_graph_key(
+    nb: int,
+    b: int = 64,
+    *,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    comm: bool = True,
+):
+    """Structural replay-cache key for :func:`build_qr_graph` (cost-model
+    shape; see the note on :func:`repro.linalg.lu.lu_graph_key` about
+    numeric-vs-cost-model panel structure)."""
+    from ..replay import graph_key
+    return graph_key(build_qr_graph(nb, b, cost=cost, ranks=ranks,
+                                    panel_threads=panel_threads, comm=comm))
+
+
 def qr_extract_r(store: TileStore) -> jnp.ndarray:
     return jnp.triu(store.assemble())
 

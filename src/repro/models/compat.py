@@ -1,0 +1,23 @@
+"""Version-compat shims for JAX API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and the replication-check kwarg was renamed ``check_rep`` -> ``check_vma``
+along the way).  Model code always calls :func:`shard_map` from here with the
+*new* kwarg spelling; the shim translates for older installs.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):          # jax >= 0.6: top-level, check_vma kwarg
+    shard_map = jax.shard_map
+else:                                   # older jax: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map_experimental(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, **kw)
+
+__all__ = ["shard_map"]

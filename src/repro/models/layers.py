@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .compat import shard_map
+
 # logical axis vocabulary (mapped to mesh axes in repro.sharding.rules)
 LOGICAL_AXES = ("batch", "seq", "embed", "heads", "kv_heads", "ff", "vocab",
                 "experts", "ssm_inner", "state", None)
@@ -433,7 +435,7 @@ def moe(p: Params, cfg, x: jnp.ndarray, *, shard_ctx=None) -> jnp.ndarray:
                                     concat_axis=1, tiled=True)
                 return lax.psum(yl, ep_axis).astype(jnp.float32)
 
-            y = jax.shard_map(
+            y = shard_map(
                 _shard_fn_g, mesh=mesh,
                 in_specs=(P(batch_axes, None), P(batch_axes, None),
                           P(batch_axes, None),
@@ -457,7 +459,7 @@ def moe(p: Params, cfg, x: jnp.ndarray, *, shard_ctx=None) -> jnp.ndarray:
                 return lax.psum(y.astype(jnp.bfloat16), ep_axis).astype(jnp.float32)
             return lax.psum(y, ep_axis)
 
-        y = jax.shard_map(
+        y = shard_map(
             _shard_fn, mesh=mesh,
             in_specs=(P(batch_axes, None), P(batch_axes, None), P(batch_axes, None),
                       P(ep_axis), P(ep_axis), P(ep_axis)),

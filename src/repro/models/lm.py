@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 from . import layers as L
 from . import ssm as S
 from .config import ModelConfig
@@ -161,7 +163,7 @@ def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray, ctx) -> jnp.ndarray:
         out = jnp.where(ok[..., None], tab[safe], 0).astype(tab.dtype)
         return lax.psum(out, ctx.model_axis)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(ctx.model_axis, None), P(batch_axes, None)),
         out_specs=P(batch_axes, None, None), check_vma=False,
@@ -226,15 +228,19 @@ def sharded_ce_loss(h: jnp.ndarray, wout: jnp.ndarray, labels: jnp.ndarray,
             cnt = cnt + jnp.sum(mask)
             return (num, cnt), None
 
+        # rank-1 (1,) carries: scalar carries become scalar autodiff
+        # residuals at the shard_map boundary, which older jax fails to
+        # promote to rank 1 (fixed upstream; harmless on new jax)
         (num, cnt), _ = lax.scan(
             jax.checkpoint(chunk, policy=jax.checkpoint_policies.nothing_saveable),
-            (jnp.float32(0.0), jnp.int32(0)), (hflat, lflat))
+            (jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.int32)),
+            (hflat, lflat))
         if batch_axes:
             num = lax.psum(num, batch_axes)
             cnt = lax.psum(cnt, batch_axes)
-        return (num / jnp.maximum(cnt, 1))[None]
+        return num / jnp.maximum(cnt, 1)
 
-    loss = jax.shard_map(
+    loss = shard_map(
         f, mesh=mesh,
         in_specs=(P(batch_axes, None, None), P(None, ctx.model_axis),
                   P(batch_axes, None)),

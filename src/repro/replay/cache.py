@@ -1,0 +1,90 @@
+"""Recording cache keyed on graph structure.
+
+A :class:`GraphCache` maps ``(GraphKey digest, n_workers, policy)`` to a
+:class:`~repro.replay.recording.Recording`.  The key is purely structural
+(see :mod:`~repro.replay.graph_key`), so each iteration of a sweep that
+rebuilds the same-shaped graph over fresh data hits the cache after the
+first (recording) iteration.
+
+With ``path`` set, recordings persist as one JSON file per cache key under
+that directory and survive the process — a second sweep skips the recording
+iteration entirely.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional, Union
+
+from ..core.taskgraph import TaskGraph
+from .graph_key import GraphKey, graph_key
+from .recording import Recording
+
+
+def cache_key(key: Union[GraphKey, str], n_workers: int, policy: str) -> str:
+    digest = key.digest if isinstance(key, GraphKey) else str(key)
+    return f"{digest[:32]}_w{n_workers}_{policy}"
+
+
+class GraphCache:
+    """In-memory (and optionally on-disk) recording store."""
+
+    def __init__(self, path: Optional[Union[str, os.PathLike]] = None):
+        self.path = os.fspath(path) if path is not None else None
+        self._mem: Dict[str, Recording] = {}
+        self._lock = threading.Lock()
+        if self.path is not None:
+            os.makedirs(self.path, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _file_for(self, ckey: str) -> Optional[str]:
+        if self.path is None:
+            return None
+        return os.path.join(self.path, f"{ckey}.json")
+
+    def lookup(
+        self,
+        graph_or_key: Union[TaskGraph, GraphKey, str],
+        n_workers: int,
+        policy: str = "hybrid",
+    ) -> Optional[Recording]:
+        """Return the cached recording for this shape/config, or None."""
+        key = (graph_key(graph_or_key) if isinstance(graph_or_key, TaskGraph)
+               else graph_or_key)
+        ckey = cache_key(key, n_workers, policy)
+        with self._lock:
+            rec = self._mem.get(ckey)
+        if rec is not None:
+            return rec
+        f = self._file_for(ckey)
+        if f is not None and os.path.exists(f):
+            with open(f) as fh:
+                rec = Recording.from_dict(json.load(fh))
+            with self._lock:
+                self._mem[ckey] = rec
+            return rec
+        return None
+
+    def store(self, recording: Recording) -> str:
+        """Cache ``recording`` (and persist it when on-disk).  Returns the
+        cache key."""
+        ckey = cache_key(recording.digest, recording.n_workers, recording.policy)
+        with self._lock:
+            self._mem[ckey] = recording
+        f = self._file_for(ckey)
+        if f is not None:
+            tmp = f + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(recording.to_dict(), fh)
+            os.replace(tmp, f)
+        return ckey
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._mem)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem.clear()

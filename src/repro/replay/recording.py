@@ -1,0 +1,192 @@
+"""Recordings of task-graph executions.
+
+A :class:`Recording` captures everything the replay executor needs to re-run
+a graph of the same shape without making any scheduling decisions:
+
+* ``worker_orders`` — for each worker, the entries it executed in start
+  order.  An entry is a task id (``int``) or a gang ULT
+  ``(spawn_tid, thread_num)`` pair (stored as a 2-list in JSON);
+* ``gang_placements`` — for each region-forking task, the recorded gang id
+  and the worker that ran each ULT (index = ``thread_num``);
+* ``gang_issue_order`` — spawn-task ids in fork (gang-id) order: the
+  monotonic-gang-id discipline replay must reproduce;
+* ``steals`` — the dynamic run's successful steal decisions
+  ``(thief, victim, entry)``, kept for analysis (the run lists already
+  incorporate their effect);
+* ``collective_order`` — comm-task ids in issue order (from the static
+  schedule's total order when seeded from one, from completion order when
+  recorded dynamically).
+
+Recordings are plain data (ints/floats/strings) — JSON round-trippable for
+the on-disk :class:`~repro.replay.cache.GraphCache`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.static_schedule import StaticSchedule
+from ..core.taskgraph import TaskGraph
+from .graph_key import GraphKey, graph_key
+
+# an executed unit: a task id, or (spawn_tid, thread_num) for a gang ULT
+Entry = Union[int, Tuple[int, int]]
+
+
+@dataclasses.dataclass
+class GangPlacement:
+    spawn_tid: int
+    gang_id: int
+    workers: List[int]          # workers[i] ran thread_num i
+
+
+class RecordingError(ValueError):
+    """A recording does not match the graph it is being replayed against."""
+
+
+@dataclasses.dataclass
+class Recording:
+    digest: str                                  # GraphKey digest recorded for
+    graph_name: str
+    n_workers: int
+    policy: str
+    worker_orders: List[List[Entry]]
+    gang_placements: Dict[int, GangPlacement] = dataclasses.field(default_factory=dict)
+    gang_issue_order: List[int] = dataclasses.field(default_factory=list)
+    steals: List[Tuple[int, int, Entry]] = dataclasses.field(default_factory=list)
+    collective_order: List[int] = dataclasses.field(default_factory=list)
+    source: str = "dynamic"                      # "dynamic" | "static"
+
+    # ------------------------------------------------------------------
+    def owner_of(self) -> Dict[int, int]:
+        """tid -> recorded worker, for plain task entries."""
+        out: Dict[int, int] = {}
+        for w, order in enumerate(self.worker_orders):
+            for e in order:
+                if isinstance(e, int):
+                    out[e] = w
+        return out
+
+    def validate_against(self, graph: TaskGraph, *, check_digest: bool = True) -> None:
+        """Raise :class:`RecordingError` unless this recording covers exactly
+        the tasks of ``graph`` (each tid once) and — when ``check_digest`` —
+        was recorded for a graph of identical structure."""
+        if check_digest:
+            key = graph_key(graph)
+            if key.digest != self.digest:
+                raise RecordingError(
+                    f"recording is for graph {self.graph_name!r} "
+                    f"(digest {self.digest[:16]}) but got {key}")
+        seen: Dict[int, int] = {}
+        for order in self.worker_orders:
+            for e in order:
+                if isinstance(e, int):
+                    seen[e] = seen.get(e, 0) + 1
+        n = len(graph)
+        missing = [t for t in range(n) if seen.get(t, 0) != 1]
+        extra = [t for t in seen if t >= n]
+        if missing or extra:
+            raise RecordingError(
+                f"recording does not cover graph 1:1 "
+                f"(bad/missing tids {missing[:8]}, out-of-range {extra[:8]})")
+
+    # ------------------------------------------------------------------
+    # serialization (plain data; gang entries become 2-lists)
+    def to_dict(self) -> Dict[str, Any]:
+        def enc(e: Entry):
+            return e if isinstance(e, int) else [int(e[0]), int(e[1])]
+        return {
+            "digest": self.digest,
+            "graph_name": self.graph_name,
+            "n_workers": self.n_workers,
+            "policy": self.policy,
+            "worker_orders": [[enc(e) for e in o] for o in self.worker_orders],
+            "gang_placements": {
+                str(tid): {"spawn_tid": p.spawn_tid, "gang_id": p.gang_id,
+                           "workers": list(p.workers)}
+                for tid, p in self.gang_placements.items()},
+            "gang_issue_order": list(self.gang_issue_order),
+            "steals": [[t, v, enc(e)] for t, v, e in self.steals],
+            "collective_order": list(self.collective_order),
+            "source": self.source,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Recording":
+        def dec(e) -> Entry:
+            return e if isinstance(e, int) else (int(e[0]), int(e[1]))
+        return cls(
+            digest=d["digest"],
+            graph_name=d.get("graph_name", ""),
+            n_workers=int(d["n_workers"]),
+            policy=d.get("policy", "hybrid"),
+            worker_orders=[[dec(e) for e in o] for o in d["worker_orders"]],
+            gang_placements={
+                int(tid): GangPlacement(p["spawn_tid"], p["gang_id"],
+                                        list(p["workers"]))
+                for tid, p in d.get("gang_placements", {}).items()},
+            gang_issue_order=list(d.get("gang_issue_order", [])),
+            steals=[(s[0], s[1], dec(s[2])) for s in d.get("steals", [])],
+            collective_order=list(d.get("collective_order", [])),
+            source=d.get("source", "dynamic"),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_json(cls, s: str) -> "Recording":
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_static_schedule(
+        cls,
+        sched: StaticSchedule,
+        graph: TaskGraph,
+        key: Optional[GraphKey] = None,
+    ) -> "Recording":
+        """Seed a recording from a frozen :class:`StaticSchedule`: slot i's
+        item order (by frozen start time) becomes worker i's run list, and
+        the schedule's collective total order is carried over.  Gang
+        placements are empty — region-forking tasks replayed from a static
+        seed are served by the executor's dynamic fallback."""
+        if key is None:
+            key = graph_key(graph)
+        # (slot, sort-key, end-time) per scheduled task
+        place: Dict[int, Tuple[int, float, float]] = {}
+        for slot, items in sched.order.items():
+            for i, it in enumerate(items):
+                place[it.tid] = (slot, float(i), it.t1)
+        # Tasks missing from the frozen trace (zero-cost joins filtered from
+        # sim events) go immediately after their latest-finishing dependency
+        # on that dependency's slot: at that point every dep has completed,
+        # so the recorded start order stays dependency-consistent.
+        eps = 1.0 / (len(graph) + 2)
+        for t in graph.topological_order():
+            if t.tid in place:
+                continue
+            best: Optional[Tuple[float, int, float]] = None   # (t1, slot, seq)
+            for d in t.deps:
+                slot_d, seq_d, t1_d = place[d]
+                if best is None or t1_d > best[0]:
+                    best = (t1_d, slot_d, seq_d)
+            if best is None:                                   # root task
+                place[t.tid] = (0, -1.0 + eps * t.tid, 0.0)
+            else:
+                place[t.tid] = (best[1], best[2] + eps * (t.tid + 1), best[0])
+        orders: List[List[Entry]] = [[] for _ in range(sched.n_slots)]
+        for tid, (slot, seq, _) in sorted(place.items(),
+                                          key=lambda kv: (kv[1][0], kv[1][1])):
+            orders[slot].append(tid)
+        return cls(
+            digest=key.digest,
+            graph_name=graph.name,
+            n_workers=sched.n_slots,
+            policy=sched.policy,
+            worker_orders=orders,
+            collective_order=sched.collective_order(),
+            source="static",
+        )

@@ -1,0 +1,245 @@
+"""Tests for the record-and-replay subsystem (repro.replay).
+
+Covers the contract documented in ``repro/replay/__init__.py``:
+bit-identical replay results, structural GraphKey identity, stale-recording
+fallback (no deadlock, no oversubscription), and the monotonic-gang-id
+issue discipline.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ListScheduler, Runtime, run_graph, TaskGraph
+from repro.linalg import (
+    build_cholesky_graph,
+    build_lu_graph,
+    cholesky_extract,
+    cholesky_graph_key,
+    lu_extract,
+    lu_graph_key,
+    random_diagdom,
+    random_spd,
+    to_tiles,
+)
+from repro.replay import (
+    GraphCache,
+    Recording,
+    RecordingError,
+    ReplayExecutor,
+    cache_key,
+    graph_key,
+    replay_graph,
+)
+
+NB, B = 6, 16
+
+
+def _record_cholesky(workers=4, seed=1, nb=NB, b=B):
+    a = random_spd(nb * b, seed=seed)
+    st = to_tiles(a, b)
+    g = build_cholesky_graph(nb, b, store=st)
+    with Runtime(workers) as rt:
+        rt.run(g, record=True)
+    return a, np.asarray(cholesky_extract(st)), rt.last_recording
+
+
+# ---------------------------------------------------------------------------
+# GraphKey
+# ---------------------------------------------------------------------------
+def test_graph_key_stable_across_rebuilds():
+    k1 = cholesky_graph_key(NB, B)
+    k2 = cholesky_graph_key(NB, B)
+    assert k1 == k2 and hash(k1) == hash(k2)
+
+
+def test_graph_key_ignores_callables():
+    a = random_spd(NB * B, seed=0)
+    numeric = build_cholesky_graph(NB, B, store=to_tiles(a, B))
+    costmodel = build_cholesky_graph(NB, B)
+    assert graph_key(numeric) == graph_key(costmodel)
+
+
+def test_graph_key_distinguishes_shapes():
+    base = cholesky_graph_key(NB, B)
+    assert base != cholesky_graph_key(NB + 1, B)          # nb
+    assert base != cholesky_graph_key(NB, B * 2)          # b (costs)
+    assert base != lu_graph_key(NB, B)                    # kernel
+    assert lu_graph_key(NB, B, panel_threads=2) != \
+        lu_graph_key(NB, B, panel_threads=4)              # parallel spec
+
+
+def test_cache_key_distinguishes_worker_count_and_policy():
+    k = cholesky_graph_key(NB, B)
+    assert cache_key(k, 2, "hybrid") != cache_key(k, 4, "hybrid")
+    assert cache_key(k, 4, "hybrid") != cache_key(k, 4, "history")
+
+
+# ---------------------------------------------------------------------------
+# replay == dynamic, bit-identical
+# ---------------------------------------------------------------------------
+def test_replay_cholesky_bit_identical():
+    a, l_dyn, rec = _record_cholesky()
+    st = to_tiles(a, B)
+    replay_graph(build_cholesky_graph(NB, B, store=st), rec)
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_replay_lu_bit_identical_with_gang_panels():
+    m = random_diagdom(5 * B, seed=2)
+    st = to_tiles(m, B)
+    g = build_lu_graph(5, B, store=st, panel_threads=3)
+    with Runtime(4) as rt:
+        rt.run(g, record=True)
+    rec = rt.last_recording
+    l1, u1 = (np.asarray(x) for x in lu_extract(st))
+    assert rec.gang_issue_order, "numeric LU must record panel forks"
+
+    st2 = to_tiles(m, B)
+    replay_graph(build_lu_graph(5, B, store=st2, panel_threads=3), rec)
+    l2, u2 = (np.asarray(x) for x in lu_extract(st2))
+    assert (l1 == l2).all() and (u1 == u2).all()
+
+
+def test_replay_task_results_match_dynamic():
+    def mk():
+        g = TaskGraph("arith")
+        xs = [g.add(lambda ctx, i=i: i * i, name=f"x{i}") for i in range(8)]
+        s = g.add(lambda ctx: sum(ctx.dep_results()), deps=xs, name="sum")
+        g.add(lambda ctx: ctx[s] * 2, deps=[s], name="double")
+        return g
+
+    res_dyn = run_graph(mk(), 3, record=True)
+    rec = run_graph.last_recording
+    res_rep = replay_graph(mk(), rec)
+    assert res_rep == res_dyn
+
+
+# ---------------------------------------------------------------------------
+# gang-id issue discipline
+# ---------------------------------------------------------------------------
+def test_replay_gang_issue_order_matches_recording():
+    m = random_diagdom(5 * B, seed=3)
+    st = to_tiles(m, B)
+    with Runtime(4) as rt:
+        rt.run(build_lu_graph(5, B, store=st, panel_threads=3), record=True)
+    rec = rt.last_recording
+    recorded_ids = [rec.gang_placements[t].gang_id for t in rec.gang_issue_order]
+    assert recorded_ids == sorted(recorded_ids), "recorded ids are monotonic"
+
+    st2 = to_tiles(m, B)
+    ex = ReplayExecutor(rec)
+    with ex:
+        ex.run(build_lu_graph(5, B, store=st2, panel_threads=3))
+        assert list(ex.issued_gang_ids) == recorded_ids
+
+
+def test_replay_gang_placement_no_oversubscription():
+    """Recorded blocking-region placements use distinct workers per region."""
+    m = random_diagdom(5 * B, seed=4)
+    st = to_tiles(m, B)
+    with Runtime(4) as rt:
+        rt.run(build_lu_graph(5, B, store=st, panel_threads=3), record=True)
+    for p in rt.last_recording.gang_placements.values():
+        assert len(set(p.workers)) == len(p.workers)
+
+
+# ---------------------------------------------------------------------------
+# stale recordings & fallback
+# ---------------------------------------------------------------------------
+def test_stale_recording_digest_rejected_then_fallback_completes():
+    from repro.linalg import CostModel
+
+    a, l_dyn, rec = _record_cholesky()
+    slow = CostModel(flop_rate=CostModel().flop_rate / 7.0)   # perturbed costs
+    st = to_tiles(a, B)
+    g = build_cholesky_graph(NB, B, store=st, cost=slow)
+    with pytest.raises(RecordingError):
+        replay_graph(g, rec)                                  # digest mismatch
+    replay_graph(g, rec, check_digest=False)                  # fallback path
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_scrambled_recording_completes_via_fallback():
+    """Reversed run lists violate the start-order invariant everywhere; the
+    dynamic fallback must still finish the graph (no deadlock)."""
+    a, l_dyn, rec = _record_cholesky()
+    bad = Recording.from_dict(rec.to_dict())
+    bad.worker_orders = [list(reversed(o)) for o in bad.worker_orders]
+    st = to_tiles(a, B)
+    ex = ReplayExecutor(bad, stall_timeout=1e-4)
+    with ex:
+        ex.run(build_cholesky_graph(NB, B, store=st), timeout=60.0)
+        assert ex.stats["fallback_steals"] > 0
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_recording_refuses_double_fork_per_task():
+    """Recordings key regions by spawning task: a task forking twice must be
+    rejected at record time, not silently corrupt the recording."""
+    g = TaskGraph("twofork")
+
+    def forks_twice(ctx):
+        ctx.parallel(2, lambda tid, region: tid)
+        ctx.parallel(2, lambda tid, region: tid)
+
+    g.add(forks_twice, name="p", kind="panel")
+    with pytest.raises(ValueError, match="more than one parallel region"):
+        run_graph(g, 3, record=True)
+
+
+def test_recording_must_cover_graph():
+    _, _, rec = _record_cholesky()
+    bad = Recording.from_dict(rec.to_dict())
+    bad.worker_orders[0] = bad.worker_orders[0][:-2]          # drop tasks
+    with pytest.raises(RecordingError):
+        replay_graph(build_cholesky_graph(NB, B), bad, check_digest=False)
+
+
+# ---------------------------------------------------------------------------
+# static-schedule seeding
+# ---------------------------------------------------------------------------
+def test_static_schedule_seeds_recording():
+    a, l_dyn, _ = _record_cholesky()
+    gcost = build_cholesky_graph(NB, B)
+    sched = ListScheduler(4, policy="hybrid").schedule(gcost)
+    rec = Recording.from_static_schedule(sched, gcost)
+    assert rec.source == "static"
+    assert rec.collective_order == sched.collective_order()
+    rec.validate_against(gcost)
+
+    st = to_tiles(a, B)
+    replay_graph(build_cholesky_graph(NB, B, store=st), rec)
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+# ---------------------------------------------------------------------------
+# cache + persistence + run_graph integration
+# ---------------------------------------------------------------------------
+def test_run_graph_cache_records_then_replays():
+    a = random_spd(NB * B, seed=5)
+    cache = GraphCache()
+    results = []
+    for _ in range(3):
+        st = to_tiles(a, B)
+        run_graph(build_cholesky_graph(NB, B, store=st), 4, cache=cache)
+        results.append(np.asarray(cholesky_extract(st)))
+    assert len(cache) == 1
+    assert (results[0] == results[1]).all() and (results[1] == results[2]).all()
+
+
+def test_graph_cache_on_disk_roundtrip(tmp_path):
+    a, l_dyn, rec = _record_cholesky()
+    cache = GraphCache(tmp_path)
+    cache.store(rec)
+    fresh = GraphCache(tmp_path)                      # new process analogue
+    hit = fresh.lookup(build_cholesky_graph(NB, B), rec.n_workers, rec.policy)
+    assert hit is not None
+    st = to_tiles(a, B)
+    replay_graph(build_cholesky_graph(NB, B, store=st), hit)
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_recording_json_roundtrip():
+    _, _, rec = _record_cholesky()
+    rec2 = Recording.from_json(rec.to_json())
+    assert rec2.to_dict() == rec.to_dict()
