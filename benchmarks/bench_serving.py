@@ -1,0 +1,204 @@
+"""Serving-loop benchmark: per-request dynamic scheduling vs pooled replay.
+
+Drives a tiny LM's decode-step task graph (repro.models.serving) exactly the
+way ``examples/serve_lm.py`` does, across worker counts:
+
+* ``dynamic`` — every request (decode step) goes through
+  ``run_graph(graph, workers)``: a fresh runtime per request, dynamic
+  scheduling.  This is the naive serving loop.
+* ``pooled``  — requests go through a persistent
+  :class:`~repro.replay.ReplayPool`: request 1 records, every later request
+  replays on warm executor threads.
+
+Steady-state request latency excludes each mode's first request (compile /
+record warmup).  Correctness is asserted, not eyeballed: the pooled run's
+token stream must be bit-identical to the dynamic run's, and a recording
+remapped across worker counts (recorded at W, replayed at W±1) must again
+produce the identical stream.
+
+Emits CSV rows (benchmarks.common schema) and ``BENCH_serving.json``.
+Env knobs: ``BENCH_SMOKE=1`` shrinks steps/workers for CI;
+``BENCH_SERVING_JSON`` overrides the output path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ARCH = os.environ.get("BENCH_SERVING_ARCH", "qwen3-14b")
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+BATCH = 4
+PROMPT = 16
+STEPS = 8 if SMOKE else 24
+WORKERS = (1, 2) if SMOKE else (1, 2, 4)
+REMAP_FROM = 2
+JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+
+
+def _setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import decode_step, init_params, prefill
+
+    cfg = get_config(ARCH).reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_len = PROMPT + STEPS + 2
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b, None, max_len=max_len))
+    decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, None))
+    return cfg, params, batch, max_len, prefill_fn, decode_fn
+
+
+def _fresh_state(setup):
+    from repro.models import make_decode_state
+
+    cfg, params, batch, max_len, prefill_fn, _ = setup
+    return make_decode_state(params, cfg, batch, n_shards=BATCH,
+                             max_len=max_len, prefill_fn=prefill_fn)
+
+
+def _decode_loop(setup, run_request) -> tuple:
+    """Run STEPS decode requests; returns (tokens ndarray, per-request s)."""
+    from repro.models import build_decode_graph
+
+    decode_fn = setup[5]
+    state = _fresh_state(setup)
+    lat: List[float] = []
+    for _ in range(STEPS):
+        g = build_decode_graph(state, decode_fn)
+        t0 = time.perf_counter()
+        run_request(g)
+        state.step_tokens.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    return np.asarray(state.tokens()), lat
+
+
+def _steady_ms(lat: List[float]) -> float:
+    # drop compile/warmup/record steps; best-of (like bench_replay) — the
+    # per-request overhead delta is deterministic, the noise floor is not
+    return float(np.min(lat[2:]) * 1e3)
+
+
+def _decode_loop_pair(setup, run_a, run_b) -> tuple:
+    """Two request streams over independent states, interleaved step by
+    step so machine noise hits both measurements equally."""
+    from repro.models import build_decode_graph
+
+    decode_fn = setup[5]
+    state_a, state_b = _fresh_state(setup), _fresh_state(setup)
+    lat_a: List[float] = []
+    lat_b: List[float] = []
+    for _ in range(STEPS):
+        for state, run, lat in ((state_a, run_a, lat_a),
+                                (state_b, run_b, lat_b)):
+            g = build_decode_graph(state, decode_fn)
+            t0 = time.perf_counter()
+            run(g)
+            state.step_tokens.block_until_ready()
+            lat.append(time.perf_counter() - t0)
+    return (np.asarray(state_a.tokens()), lat_a,
+            np.asarray(state_b.tokens()), lat_b)
+
+
+def bench_workers(setup, workers: int) -> Dict:
+    from repro.core import run_graph
+    from repro.replay import ReplayPool
+
+    with ReplayPool() as pool:
+        tok_dyn, lat_dyn, tok_pool, lat_pool = _decode_loop_pair(
+            setup,
+            lambda g: run_graph(g, workers),
+            lambda g: run_graph(g, workers, pool=pool))
+        stats = next(iter(pool.describe().values()))
+    identical = bool((tok_dyn == tok_pool).all())
+    assert identical, f"pooled replay diverged from dynamic at {workers} workers"
+    assert stats["records"] == 1 and stats["warmups"] == 1, stats
+    assert stats["replays"] + stats["rerecords"] == STEPS - 2, stats
+    dyn_ms, pool_ms = _steady_ms(lat_dyn), _steady_ms(lat_pool)
+    return {
+        "bench": "serving", "arch": ARCH, "workers": workers, "shards": BATCH,
+        "steps": STEPS,
+        "dynamic_ms": round(dyn_ms, 3),
+        "pooled_ms": round(pool_ms, 3),
+        "speedup": round(dyn_ms / pool_ms, 3),
+        "dynamic_tok_s": round(BATCH / (dyn_ms * 1e-3), 1),
+        "pooled_tok_s": round(BATCH / (pool_ms * 1e-3), 1),
+        "identical": identical,
+    }
+
+
+def bench_remap(setup, src_workers: int, dst_workers: int,
+                reference: np.ndarray) -> Dict:
+    """Record at ``src_workers``, remap, replay the whole decode loop at
+    ``dst_workers`` — token stream must match the dynamic reference."""
+    from repro.core import run_graph
+    from repro.replay import GraphCache, ReplayPool, remap_recording
+
+    cache = GraphCache()
+    with ReplayPool(cache) as pool:
+        _decode_loop(setup, lambda g: run_graph(g, src_workers, pool=pool))
+    rec = next(iter(cache.candidates(
+        pool.last_recording.digest).values()))
+    remapped = remap_recording(rec, dst_workers)
+    cache.store(remapped)
+
+    # a replica pool at the new worker count adopts the shipped recording:
+    # no dynamic recording run happens (records stays 0)
+    with ReplayPool(cache, allow_remap=False) as replica:
+        tok, lat = _decode_loop(
+            setup, lambda g: run_graph(g, dst_workers, pool=replica))
+        stats = next(iter(replica.describe().values()))
+    identical = bool((tok == reference).all())
+    assert identical, f"remapped replay {src_workers}->{dst_workers} diverged"
+    assert stats["records"] == 0, stats
+    return {
+        "bench": "serving_remap", "arch": ARCH,
+        "from_workers": src_workers, "to_workers": dst_workers,
+        "steps": STEPS, "pooled_ms": round(_steady_ms(lat), 3),
+        "identical": identical,
+    }
+
+
+def bench() -> List[Dict]:
+    setup = _setup()
+    rows = [bench_workers(setup, w) for w in WORKERS]
+    from repro.core import run_graph
+
+    reference, _ = _decode_loop(setup, lambda g: run_graph(g, REMAP_FROM))
+    for dst in (REMAP_FROM - 1, REMAP_FROM + 1):
+        rows.append(bench_remap(setup, REMAP_FROM, dst, reference))
+    return rows
+
+
+def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
+    out = {
+        "bench": "serving",
+        "meta": {"arch": ARCH, "batch": BATCH, "prompt": PROMPT,
+                 "steps": STEPS, "workers": list(WORKERS), "smoke": SMOKE},
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=1)
+
+
+def main():
+    from .common import emit
+
+    rows = bench()
+    emit([r for r in rows if r["bench"] == "serving"])
+    print()
+    emit([r for r in rows if r["bench"] == "serving_remap"])
+    write_json(rows)
+    print(f"# wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,8 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from . import (bench_replay, bench_runtime, fig7_lu_qr, fig8_critical_path,
-                   fig9_victim, fig11_cholesky, roofline)
+    from . import (bench_replay, bench_runtime, bench_serving, fig7_lu_qr,
+                   fig8_critical_path, fig9_victim, fig11_cholesky, roofline)
 
     print("# fig7: LU/QR gang-scheduling vs oversubscription (paper Fig. 7)")
     fig7_lu_qr.main()
@@ -28,6 +28,9 @@ def main() -> None:
     print()
     print("# replay: dynamic-vs-replay scheduling overhead (BENCH_replay.json)")
     bench_replay.main()
+    print()
+    print("# serving: per-request dynamic vs pooled replay (BENCH_serving.json)")
+    bench_serving.main()
     print()
     print("# roofline: dry-run derived terms (EXPERIMENTS.md section Roofline)")
     roofline.main()

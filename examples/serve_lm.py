@@ -1,10 +1,16 @@
 """Serving driver: batched prefill + decode with a KV cache.
 
 Loads (or initializes) a small model, prefills a batch of prompts, then
-decodes N tokens per request — the serve-side analogue of the dry-run's
-decode cells.
+decodes N tokens per request.  Three decode schedulers:
 
-Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32
+* ``jit``     — the original monolithic jitted decode loop (no task graph);
+* ``dynamic`` — each decode step is a task graph (per-shard decode/sample
+  plus a gather join) executed by a fresh dynamic runtime per request;
+* ``pool``    — the same graphs served by a persistent
+  :class:`~repro.replay.ReplayPool`: step 1 records, every later step
+  replays on warm executor threads, drift triggers adaptive re-recording.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32 --scheduler pool
 """
 
 import argparse
@@ -14,7 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.models import decode_step, init_params, prefill
+from repro.core import run_graph
+from repro.models import (build_decode_graph, decode_step, greedy_sample,
+                          init_params, make_decode_state, prefill)
+from repro.replay import GraphCache, ReplayPool
 
 
 def main():
@@ -23,6 +32,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--scheduler", choices=("jit", "dynamic", "pool"),
+                    default="pool")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="runtime workers for dynamic/pool scheduling")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="batch shards per decode graph (default: batch)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="on-disk GraphCache dir (pool): recordings persist "
+                         "across processes / ship to replicas")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -44,23 +62,48 @@ def main():
     prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b, None, max_len=max_len))
     decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, None))
 
-    t0 = time.perf_counter()
-    cache, logits = prefill_fn(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"scheduler={args.scheduler}")
 
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        cache, logits = decode_fn(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    tok.block_until_ready()
-    t_decode = time.perf_counter() - t0
+    if args.scheduler == "jit":
+        t0 = time.perf_counter()
+        cache, logits = prefill_fn(params, batch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        tok = greedy_sample(logits)
+        out_tokens = [tok]
+        t0 = time.perf_counter()
+        for _ in range(args.tokens - 1):
+            cache, logits = decode_fn(params, cache, tok)
+            tok = greedy_sample(logits)
+            out_tokens.append(tok)
+        tok.block_until_ready()
+        t_decode = time.perf_counter() - t0
+        gen = jnp.concatenate(out_tokens, axis=1)
+    else:
+        n_shards = args.shards or args.batch
+        t0 = time.perf_counter()
+        state = make_decode_state(params, cfg, batch, n_shards=n_shards,
+                                  max_len=max_len, prefill_fn=prefill_fn)
+        state.step_tokens.block_until_ready()
+        t_prefill = time.perf_counter() - t0
 
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
+        pool = None
+        if args.scheduler == "pool":
+            cache_store = GraphCache(args.cache_dir) if args.cache_dir else None
+            pool = ReplayPool(cache_store)
+        t0 = time.perf_counter()
+        for _ in range(args.tokens - 1):
+            g = build_decode_graph(state, decode_fn)
+            run_graph(g, args.workers, pool=pool)
+        state.step_tokens.block_until_ready()
+        t_decode = time.perf_counter() - t0
+        gen = state.tokens()
+        if pool is not None:
+            for ckey, stats in pool.describe().items():
+                print(f"pool[{ckey[:20]}…]: {stats}")
+            pool.shutdown()
+
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
     print(f"decode:  {t_decode*1e3:.1f} ms for {args.tokens-1} steps "

@@ -555,11 +555,19 @@ def run_graph(
     record: bool = False,
     replay: Any = None,
     cache: Any = None,
+    pool: Any = None,
 ) -> Dict[int, Any]:
     """Convenience: run a graph on a fresh runtime and shut it down.
 
     Record-and-replay hooks (see :mod:`repro.replay`):
 
+    * ``pool`` — a :class:`~repro.replay.ReplayPool`: serve the execution
+      from a persistent per-shape executor (records on first sight, replays
+      after, adaptively re-records on drift).  The serving-loop path: no
+      per-request runtime or executor construction.  ``gang_default`` and
+      ``seed`` are forwarded to the pool's dynamic warmup/recording runs;
+      ``record``/``replay``/``cache``/``trace`` are the pool's own business
+      and rejected when combined with it;
     * ``replay`` — a :class:`~repro.replay.Recording`: skip the dynamic
       scheduler entirely and replay the graph on a
       :class:`~repro.replay.ReplayExecutor`;
@@ -570,6 +578,16 @@ def run_graph(
     * ``record`` — instrument the dynamic run; the recording is returned via
       ``run_graph.last_recording`` (also stored in ``cache`` when given).
     """
+    if pool is not None:
+        if record or replay is not None or cache is not None or trace:
+            raise ValueError(
+                "run_graph(pool=...) owns recording/replay/caching itself; "
+                "record/replay/cache/trace cannot be combined with a pool")
+        results = pool.run(graph, n_workers, policy=policy,
+                           gang_default=gang_default, seed=seed,
+                           timeout=timeout)
+        run_graph.last_recording = pool.last_recording
+        return results
     if replay is not None:
         from ..replay.executor import replay_graph
         run_graph.last_recording = replay

@@ -14,8 +14,24 @@ from .lm import (
     prefill,
     zeros_cache,
 )
+from .serving import (
+    DecodeShard,
+    DecodeState,
+    build_decode_graph,
+    decode_graph_key,
+    greedy_sample,
+    make_decode_state,
+    shard_batch,
+)
 
 __all__ = [
+    "DecodeShard",
+    "DecodeState",
+    "build_decode_graph",
+    "decode_graph_key",
+    "greedy_sample",
+    "make_decode_state",
+    "shard_batch",
     "ModelConfig",
     "abstract_params",
     "cache_pspecs",

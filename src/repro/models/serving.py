@@ -1,0 +1,166 @@
+"""Decode-step task graphs for the serving loop.
+
+``examples/serve_lm.py`` decodes token-by-token: every step applies the same
+computation to every request in the batch.  This module expresses one decode
+step as a :class:`~repro.core.taskgraph.TaskGraph` — the batch is split into
+*shards*, each shard gets a ``decode -> sample`` task chain, and a final
+``gather`` task joins the step — so the step can run on the task-graph
+runtime and, because every step builds the *same graph shape* (names, kinds,
+costs, dependencies — the callables differ but :func:`~repro.replay.graph_key`
+ignores callables), the whole decode loop replays from one recording via the
+:class:`~repro.replay.ReplayPool`.
+
+State lives in a mutable :class:`DecodeState` (the serving analogue of the
+tile stores the factorization graphs close over): each shard owns its KV
+cache and current token, task bodies read/write their own shard, and the
+dependency edges order every access — replay is bit-identical to dynamic
+execution regardless of interleaving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.taskgraph import TaskGraph
+
+# decode_fn(params, cache, tok) -> (new_cache, logits); sample_fn(logits) -> tok
+DecodeFn = Callable[[Any, Any, Any], Any]
+SampleFn = Callable[[Any], Any]
+
+
+def greedy_sample(logits: Any) -> Any:
+    """Argmax over the last position — the serve_lm default sampler."""
+    import jax.numpy as jnp
+
+    return jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class DecodeShard:
+    """One batch shard's mutable serving state."""
+
+    cache: Any
+    tok: Any
+    logits: Any = None
+
+
+class DecodeState:
+    """Sharded decode-loop state driven by the decode-step graph.
+
+    ``shards[s]`` is read and written only by shard ``s``'s tasks;
+    ``step_tokens`` / ``history`` are written only by the gather task.
+    """
+
+    def __init__(self, params: Any, shards: List[DecodeShard]):
+        self.params = params
+        self.shards = shards
+        self.step_tokens: Any = None
+        self.history: List[Any] = []
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def tokens(self) -> Any:
+        """All sampled tokens so far, concatenated (batch, steps)."""
+        import jax.numpy as jnp
+
+        return jnp.concatenate(self.history, axis=1)
+
+
+def build_decode_graph(
+    state: DecodeState,
+    decode_fn: DecodeFn,
+    sample_fn: Optional[SampleFn] = None,
+) -> TaskGraph:
+    """One decode step over ``state``: per shard ``decode -> sample``, then a
+    ``gather`` join.  Rebuilding per step yields an identical
+    :func:`~repro.replay.graph_key` digest, so a :class:`~repro.replay.ReplayPool`
+    records step 1 and replays every later step."""
+    sample = sample_fn or greedy_sample
+    g = TaskGraph(f"decode_step[{state.n_shards}]")
+    samples = []
+    for s in range(state.n_shards):
+        def _decode(ctx, s=s):
+            sh = state.shards[s]
+            sh.cache, sh.logits = decode_fn(state.params, sh.cache, sh.tok)
+
+        dec = g.add(_decode, name=f"decode{s}", kind="compute", cost=1.0)
+
+        def _sample(ctx, s=s):
+            sh = state.shards[s]
+            sh.tok = sample(sh.logits)
+            return sh.tok
+
+        samples.append(
+            g.add(_sample, deps=[dec], name=f"sample{s}", kind="compute",
+                  cost=0.1))
+
+    def _gather(ctx):
+        import jax.numpy as jnp
+
+        toks = [state.shards[s].tok for s in range(state.n_shards)]
+        state.step_tokens = jnp.concatenate(toks, axis=0)
+        state.history.append(state.step_tokens)
+        return state.step_tokens
+
+    g.add(_gather, deps=samples, name="gather", kind="comm", cost=0.05)
+    return g
+
+
+def decode_graph_key(n_shards: int):
+    """Structural key of the ``n_shards`` decode-step graph (for priming a
+    cache / registering a pool builder without building real state)."""
+    from ..replay.graph_key import graph_key
+
+    skeleton = DecodeState(None, [DecodeShard(None, None)] * n_shards)
+    return graph_key(build_decode_graph(skeleton, lambda p, c, t: (c, t)))
+
+
+def shard_batch(batch: Dict[str, Any], n_shards: int) -> List[Dict[str, Any]]:
+    """Split every batch array along axis 0 into ``n_shards`` equal parts."""
+    sizes = {v.shape[0] for v in batch.values()}
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent batch sizes: {sorted(sizes)}")
+    (bsz,) = sizes
+    if bsz % n_shards:
+        raise ValueError(f"batch size {bsz} does not shard into {n_shards}")
+    per = bsz // n_shards
+    return [{k: v[s * per:(s + 1) * per] for k, v in batch.items()}
+            for s in range(n_shards)]
+
+
+def make_decode_state(
+    params: Any,
+    cfg: Any,
+    batch: Dict[str, Any],
+    *,
+    n_shards: int,
+    max_len: int,
+    prefill_fn: Optional[Callable[[Any, Dict[str, Any]], Any]] = None,
+    sample_fn: Optional[SampleFn] = None,
+) -> DecodeState:
+    """Prefill each shard and seed its first decode token.  The prefill
+    logits' greedy token is recorded as step 0 of ``history``."""
+    import jax
+
+    from .lm import prefill
+
+    if prefill_fn is None:
+        prefill_fn = jax.jit(
+            lambda p, b: prefill(p, cfg, b, None, max_len=max_len))
+    sample = sample_fn or greedy_sample
+    shards: List[DecodeShard] = []
+    first: List[Any] = []
+    for sub in shard_batch(batch, n_shards):
+        cache, logits = prefill_fn(params, sub)
+        tok = sample(logits)
+        shards.append(DecodeShard(cache=cache, tok=tok, logits=logits))
+        first.append(tok)
+    state = DecodeState(params, shards)
+    import jax.numpy as jnp
+
+    state.step_tokens = jnp.concatenate(first, axis=0)
+    state.history.append(state.step_tokens)
+    return state

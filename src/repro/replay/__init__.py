@@ -22,7 +22,12 @@ idea):
 * :class:`ReplayExecutor` — re-executes the graph from the recording with
   preallocated per-worker run lists, per-task dependency counters under
   per-task locks, and recorded gang placements: no victim selection, no
-  ``GET_WORKERS`` scan, near-zero fork-lock work.
+  ``GET_WORKERS`` scan, near-zero fork-lock work;
+* :class:`ReplayPool` — persistent executors keyed on ``(GraphKey,
+  n_workers, policy)`` for steady-state serving loops, with adaptive
+  re-recording on sustained drift and worker-count remapping
+  (:func:`remap_recording`) of recordings shipped at a different worker
+  count.
 
 The record/replay contract
 --------------------------
@@ -51,17 +56,23 @@ gang-id) issue order.
 from .cache import GraphCache, cache_key
 from .executor import ReplayError, ReplayExecutor, replay_graph
 from .graph_key import GraphKey, graph_key
+from .pool import PoolEntryStats, ReplayPool
 from .recording import GangPlacement, Recording, RecordingError
+from .remap import RemapError, remap_recording
 
 __all__ = [
     "GangPlacement",
     "GraphCache",
     "GraphKey",
+    "PoolEntryStats",
     "Recording",
     "RecordingError",
+    "RemapError",
     "ReplayError",
     "ReplayExecutor",
+    "ReplayPool",
     "cache_key",
     "graph_key",
+    "remap_recording",
     "replay_graph",
 ]

@@ -8,15 +8,24 @@ first (recording) iteration.
 
 With ``path`` set, recordings persist as one JSON file per cache key under
 that directory and survive the process — a second sweep skips the recording
-iteration entirely.
+iteration entirely.  A truncated or corrupt cache file is *ignored* (and
+quarantined as ``<file>.corrupt``), never fatal: the caller simply misses
+and re-records, overwriting the bad entry.
+
+:meth:`GraphCache.swap` atomically replaces an entry (returning the old
+recording) — the hot-swap primitive the replay pool uses for adaptive
+re-recording — and :meth:`GraphCache.candidates` enumerates every worker
+count a digest has been recorded at, which is what worker-count remapping
+(:mod:`~repro.replay.remap`) feeds on.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import re
 import threading
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Union
 
 from ..core.taskgraph import TaskGraph
 from .graph_key import GraphKey, graph_key
@@ -26,6 +35,9 @@ from .recording import Recording
 def cache_key(key: Union[GraphKey, str], n_workers: int, policy: str) -> str:
     digest = key.digest if isinstance(key, GraphKey) else str(key)
     return f"{digest[:32]}_w{n_workers}_{policy}"
+
+
+_CKEY_RE = re.compile(r"^(?P<digest>[0-9a-f]{32})_w(?P<workers>\d+)_(?P<policy>.+)$")
 
 
 class GraphCache:
@@ -44,6 +56,23 @@ class GraphCache:
             return None
         return os.path.join(self.path, f"{ckey}.json")
 
+    def _load_file(self, f: str) -> Optional[Recording]:
+        """Parse one on-disk recording; quarantine and miss on corruption."""
+        try:
+            with open(f) as fh:
+                return Recording.from_dict(json.load(fh))
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError, KeyError, TypeError):
+            # truncated write, corrupt JSON, or a schema from another era:
+            # move it aside (best effort) so we stop re-parsing it, and let
+            # the caller re-record over the key
+            try:
+                os.replace(f, f + ".corrupt")
+            except OSError:
+                pass
+            return None
+
     def lookup(
         self,
         graph_or_key: Union[TaskGraph, GraphKey, str],
@@ -60,12 +89,20 @@ class GraphCache:
             return rec
         f = self._file_for(ckey)
         if f is not None and os.path.exists(f):
-            with open(f) as fh:
-                rec = Recording.from_dict(json.load(fh))
-            with self._lock:
-                self._mem[ckey] = rec
+            rec = self._load_file(f)
+            if rec is not None:
+                with self._lock:
+                    self._mem[ckey] = rec
             return rec
         return None
+
+    def _write(self, ckey: str, recording: Recording) -> None:
+        f = self._file_for(ckey)
+        if f is not None:
+            tmp = f + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(recording.to_dict(), fh)
+            os.replace(tmp, f)
 
     def store(self, recording: Recording) -> str:
         """Cache ``recording`` (and persist it when on-disk).  Returns the
@@ -73,13 +110,75 @@ class GraphCache:
         ckey = cache_key(recording.digest, recording.n_workers, recording.policy)
         with self._lock:
             self._mem[ckey] = recording
-        f = self._file_for(ckey)
-        if f is not None:
-            tmp = f + ".tmp"
-            with open(tmp, "w") as fh:
-                json.dump(recording.to_dict(), fh)
-            os.replace(tmp, f)
+        self._write(ckey, recording)
         return ckey
+
+    def swap(self, recording: Recording) -> Optional[Recording]:
+        """Hot-swap ``recording`` over whatever the cache held for its key
+        and return the replaced recording (None when the slot was empty).
+        The in-memory exchange is atomic — concurrent swappers see each
+        other's recordings as ``old``, never the same one twice.  On-disk,
+        last writer wins (each write is an atomic file replace)."""
+        # populate _mem from disk first so a disk-only entry surfaces as old
+        self.lookup(recording.digest, recording.n_workers, recording.policy)
+        ckey = cache_key(recording.digest, recording.n_workers, recording.policy)
+        with self._lock:
+            old = self._mem.get(ckey)
+            self._mem[ckey] = recording
+        self._write(ckey, recording)
+        return old
+
+    def invalidate(
+        self,
+        key: Union[GraphKey, str],
+        n_workers: int,
+        policy: str = "hybrid",
+    ) -> bool:
+        """Drop an entry from memory and disk.  Returns True if anything
+        was removed."""
+        ckey = cache_key(key, n_workers, policy)
+        with self._lock:
+            dropped = self._mem.pop(ckey, None) is not None
+        f = self._file_for(ckey)
+        if f is not None and os.path.exists(f):
+            try:
+                os.remove(f)
+                dropped = True
+            except OSError:
+                pass
+        return dropped
+
+    def candidates(
+        self,
+        key: Union[GraphKey, str],
+        policy: str = "hybrid",
+    ) -> Dict[int, Recording]:
+        """All recordings of this digest+policy, keyed by worker count —
+        the feedstock for worker-count remapping when the exact count
+        misses."""
+        digest = (key.digest if isinstance(key, GraphKey) else str(key))[:32]
+        out: Dict[int, Recording] = {}
+        if self.path is not None and os.path.isdir(self.path):
+            for fname in os.listdir(self.path):
+                if not fname.endswith(".json"):
+                    continue
+                m = _CKEY_RE.match(fname[:-len(".json")])
+                if not m or m.group("digest") != digest or m.group("policy") != policy:
+                    continue
+                rec = self.lookup(digest, int(m.group("workers")), policy)
+                if rec is not None:
+                    out[rec.n_workers] = rec
+        with self._lock:
+            mem = list(self._mem.items())
+        for ckey, rec in mem:
+            m = _CKEY_RE.match(ckey)
+            if m and m.group("digest") == digest and m.group("policy") == policy:
+                out[rec.n_workers] = rec
+        return out
+
+    def keys(self) -> List[str]:
+        with self._lock:
+            return sorted(self._mem)
 
     def __len__(self) -> int:
         with self._lock:

@@ -1,0 +1,411 @@
+"""Replay-serving pool: persistent executors with adaptive re-recording.
+
+A steady-state serving loop (``examples/serve_lm.py``: one decode-step graph
+per request) re-executes the same graph *shape* indefinitely.  Running each
+request through :func:`~repro.core.runtime.run_graph` pays per-request
+runtime construction — thread spawn, queue allocation — on top of dynamic
+scheduling; even ``run_graph(cache=...)`` builds a fresh
+:class:`~repro.replay.executor.ReplayExecutor` (and its worker threads) per
+call.  :class:`ReplayPool` keeps one long-lived executor per
+``(GraphKey digest, n_workers, policy)`` and serves repeated executions on
+warm threads:
+
+* **first requests** for a shape run dynamically: ``warmup_runs`` requests
+  unrecorded (so jit compiles / cold caches do not skew the recorded
+  placement), then one recording run — or the pool adopts a recording
+  already in the :class:`~repro.replay.cache.GraphCache` (e.g. shipped from
+  a profiling run) with no dynamic run at all — and parks a started
+  executor;
+* **worker-count remapping** — when the cache holds the shape only at a
+  different worker count, the pool re-keys it via
+  :func:`~repro.replay.remap.remap_recording` instead of paying a fresh
+  recording run;
+* **adaptive re-recording** — after every replay the pool reads
+  ``ReplayExecutor.stats``; when the drift rate ``(fallback_steals +
+  skips) / n_entries`` stays above ``drift_threshold`` for
+  ``drift_patience`` consecutive runs, the recording is declared stale.
+  (Fallback steals and skips are *plan deviations* — work executed off its
+  recorded slot.  Raw stall counts are deliberately excluded: a worker
+  legitimately idles through many stall windows while a long task body it
+  depends on runs to completion.)
+  The next request then re-records: inline (that request runs dynamically
+  with instrumentation on — it is served normally, its recording is the
+  fresh one) or, when a side-effect-free graph *builder* was registered via
+  :meth:`register_builder`, in a **background thread** that records the
+  builder's twin graph while requests keep replaying the stale recording.
+  Either way the new recording is hot-swapped into the ``GraphCache``
+  (:meth:`GraphCache.swap`) and the entry's executor is rebuilt.
+
+Thread safety: requests for *different* shapes run concurrently on their
+own executors; requests for the same shape serialize on the entry lock (one
+executor replays one graph at a time by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+from ..core.taskgraph import TaskGraph
+from .cache import GraphCache, cache_key
+from .executor import ReplayExecutor
+from .graph_key import GraphKey, graph_key
+from .recording import Recording
+from .remap import RemapError, nearest_worker_count, remap_recording
+
+
+@dataclasses.dataclass
+class PoolEntryStats:
+    """Per-(shape, workers, policy) serving counters."""
+
+    requests: int = 0
+    replays: int = 0
+    warmups: int = 0          # unrecorded dynamic runs before recording
+    records: int = 0          # cold dynamic recording runs
+    remaps: int = 0           # recordings adopted via worker-count remap
+    rerecords: int = 0        # adaptive re-recording swaps
+    drift: float = 0.0        # last observed drift rate
+    drift_strikes: int = 0    # consecutive runs past the threshold
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class _PoolEntry:
+    """One persistent executor + its recording + drift bookkeeping."""
+
+    __slots__ = ("executor", "recording", "n_entries", "lock", "stats",
+                 "needs_rerecord", "rerecord_inflight", "last_error")
+
+    def __init__(self) -> None:
+        self.executor: Optional[ReplayExecutor] = None
+        self.recording: Optional[Recording] = None
+        self.n_entries = 1
+        self.lock = threading.Lock()
+        self.stats = PoolEntryStats()
+        self.needs_rerecord = False
+        self.rerecord_inflight = False
+        self.last_error: Optional[BaseException] = None
+
+
+class ReplayPool:
+    """Persistent replay-serving pool (see module docstring).
+
+    Parameters
+    ----------
+    cache:
+        Backing :class:`GraphCache` (fresh in-memory one by default).  Give
+        it a ``path`` to adopt recordings shipped from other processes and
+        to persist re-recordings.
+    drift_threshold / drift_patience:
+        A replay whose ``(fallback steals + skips) / entries`` rate exceeds
+        ``drift_threshold`` counts one strike; ``drift_patience`` strikes in
+        a row trigger re-recording.
+    allow_remap:
+        On a cache miss for the exact worker count, remap the nearest
+        recorded worker count instead of recording from scratch.
+    warmup_runs:
+        Dynamic *unrecorded* requests served before the recording run when
+        no cached recording exists.  The first execution of a shape
+        typically pays one-off costs (jit compilation, cold allocator) that
+        would bake a skewed task placement into the recording; recording a
+        warm run captures the steady-state schedule.  Adopted/remapped
+        recordings skip warmup entirely.
+    stall_timeout:
+        Forwarded to each :class:`ReplayExecutor`.
+    """
+
+    def __init__(
+        self,
+        cache: Optional[GraphCache] = None,
+        *,
+        drift_threshold: float = 0.25,
+        drift_patience: int = 3,
+        allow_remap: bool = True,
+        warmup_runs: int = 1,
+        stall_timeout: float = 1e-3,
+    ):
+        self.cache = cache if cache is not None else GraphCache()
+        self.drift_threshold = drift_threshold
+        self.drift_patience = drift_patience
+        self.allow_remap = allow_remap
+        self.warmup_runs = warmup_runs
+        self.stall_timeout = stall_timeout
+        self.last_recording: Optional[Recording] = None
+
+        self._entries: Dict[str, _PoolEntry] = {}
+        self._builders: Dict[str, Callable[[], TaskGraph]] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    def shutdown(self) -> None:
+        """Stop every executor.  Terminal: later :meth:`run` calls raise
+        (a request racing shutdown either completes first — shutdown waits
+        on its entry lock — or observes the closed flag before it can
+        install an executor nobody could ever stop)."""
+        with self._lock:
+            self._closed = True
+            entries = list(self._entries.values())
+            self._entries.clear()
+        for entry in entries:
+            with entry.lock:
+                if entry.executor is not None:
+                    entry.executor.shutdown()
+                    entry.executor = None
+
+    def __enter__(self) -> "ReplayPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    # ------------------------------------------------------------------
+    # introspection
+    def describe(self) -> Dict[str, Dict[str, Any]]:
+        """{cache key: stats dict} for every shape the pool has served."""
+        with self._lock:
+            entries = dict(self._entries)
+        return {ckey: e.stats.as_dict() for ckey, e in entries.items()}
+
+    def register_builder(
+        self,
+        key: Union[TaskGraph, GraphKey, str],
+        builder: Callable[[], TaskGraph],
+    ) -> None:
+        """Register a zero-arg factory producing a fresh, *side-effect-free*
+        graph of this shape (e.g. a decode step over scratch state).  With a
+        builder registered, adaptive re-recording runs in a background
+        thread on the builder's twin graph instead of making a request pay
+        the dynamic run."""
+        digest = self._digest_of(key)
+        with self._lock:
+            self._builders[digest] = builder
+
+    @staticmethod
+    def _digest_of(key: Union[TaskGraph, GraphKey, str]) -> str:
+        if isinstance(key, TaskGraph):
+            return graph_key(key).digest
+        return key.digest if isinstance(key, GraphKey) else str(key)
+
+    # ------------------------------------------------------------------
+    # serving
+    def run(
+        self,
+        graph: TaskGraph,
+        n_workers: int,
+        *,
+        policy: str = "hybrid",
+        gang_default: bool = True,
+        seed: int = 0,
+        timeout: float = 300.0,
+        key: Optional[GraphKey] = None,
+    ) -> Dict[int, Any]:
+        """Serve one execution of ``graph``; returns ``{tid: result}``.
+
+        ``gang_default`` / ``seed`` configure the dynamic runtime used for
+        warmup, recording, and re-recording runs (replays are driven purely
+        by the recording).  They are not part of the entry key: one shape
+        should be served under one scheduling configuration.
+
+        ``key`` skips the per-request structural hash when the caller
+        already knows it (e.g. a decode loop rebuilding one shape — see
+        :func:`repro.models.decode_graph_key`); the executor still enforces
+        the 1:1 task cover, so a wrong key fails loudly, not silently."""
+        if key is None:
+            key = graph_key(graph)
+        ckey = cache_key(key, n_workers, policy)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ReplayPool is shut down")
+            entry = self._entries.get(ckey)
+            if entry is None:
+                entry = self._entries[ckey] = _PoolEntry()
+            builder = self._builders.get(key.digest)
+
+        rt_kwargs = {"policy": policy, "gang_default": gang_default,
+                     "seed": seed}
+        with entry.lock:
+            if self._closed:
+                raise RuntimeError("ReplayPool is shut down")
+            entry.stats.requests += 1
+            if entry.executor is None:
+                results = self._materialize(entry, key, graph, n_workers,
+                                            rt_kwargs, timeout)
+                self.last_recording = entry.recording
+                return results
+            if entry.needs_rerecord:
+                if builder is None:
+                    results = self._rerecord_inline(entry, graph, n_workers,
+                                                    rt_kwargs, timeout)
+                    self.last_recording = entry.recording
+                    return results
+                if not entry.rerecord_inflight:
+                    entry.rerecord_inflight = True
+                    threading.Thread(
+                        target=self._rerecord_background,
+                        args=(entry, builder, n_workers, rt_kwargs, timeout),
+                        daemon=True,
+                        name=f"replay-pool-rerecord-{ckey[:12]}",
+                    ).start()
+            results = entry.executor.run(graph, timeout=timeout)
+            entry.stats.replays += 1
+            self._observe_drift(entry)
+            self.last_recording = entry.recording
+            return results
+
+    # ------------------------------------------------------------------
+    # entry construction paths
+    def _materialize(
+        self,
+        entry: _PoolEntry,
+        key: GraphKey,
+        graph: TaskGraph,
+        n_workers: int,
+        rt_kwargs: Dict[str, Any],
+        timeout: float,
+    ) -> Dict[int, Any]:
+        """Cold path: adopt / remap / record, park the executor, serve."""
+        policy = rt_kwargs["policy"]
+        rec = self.cache.lookup(key, n_workers, policy)
+        if rec is None and self.allow_remap:
+            rec = self._remap_from_cache(entry, key, n_workers, policy)
+        if rec is not None:
+            self._install(entry, rec)
+            results = entry.executor.run(graph, timeout=timeout)
+            entry.stats.replays += 1
+            self._observe_drift(entry)
+            return results
+        if entry.stats.warmups < self.warmup_runs:
+            # serve cold requests dynamically without recording: the first
+            # executions pay one-off costs (jit compiles) whose skew would
+            # otherwise be baked into the recorded placement
+            entry.stats.warmups += 1
+            from ..core.runtime import Runtime
+
+            rt = Runtime(n_workers, **rt_kwargs)
+            with rt:
+                return rt.run(graph, timeout=timeout)
+        results, recording = self._record_dynamic(graph, n_workers, rt_kwargs,
+                                                  timeout)
+        entry.stats.records += 1
+        self.cache.store(recording)
+        self._install(entry, recording)
+        return results
+
+    def _remap_from_cache(
+        self,
+        entry: _PoolEntry,
+        key: GraphKey,
+        n_workers: int,
+        policy: str,
+    ) -> Optional[Recording]:
+        donors = self.cache.candidates(key, policy)
+        donors.pop(n_workers, None)          # exact hits were already tried
+        while donors:
+            src = nearest_worker_count(list(donors), n_workers)
+            try:
+                rec = remap_recording(donors.pop(src), n_workers)
+            except RemapError:
+                continue                     # e.g. a gang too wide — next donor
+            self.cache.store(rec)
+            entry.stats.remaps += 1
+            return rec
+        return None
+
+    def _record_dynamic(
+        self,
+        graph: TaskGraph,
+        n_workers: int,
+        rt_kwargs: Dict[str, Any],
+        timeout: float,
+    ) -> Tuple[Dict[int, Any], Recording]:
+        from ..core.runtime import Runtime
+
+        rt = Runtime(n_workers, **rt_kwargs)
+        with rt:
+            results = rt.run(graph, timeout=timeout, record=True)
+        return results, rt.last_recording
+
+    def _install(self, entry: _PoolEntry, recording: Recording) -> None:
+        """(Re)build the entry's persistent executor around ``recording``."""
+        if entry.executor is not None:
+            entry.executor.shutdown()
+        entry.recording = recording
+        entry.n_entries = max(
+            1, sum(len(o) for o in recording.worker_orders))
+        entry.executor = ReplayExecutor(
+            recording, stall_timeout=self.stall_timeout, check_digest=False)
+        entry.executor.start()
+        entry.needs_rerecord = False
+        entry.stats.drift_strikes = 0
+
+    # ------------------------------------------------------------------
+    # adaptive re-recording
+    def _observe_drift(self, entry: _PoolEntry) -> None:
+        stats = entry.executor.stats
+        drift = (stats.get("fallback_steals", 0)
+                 + stats.get("skips", 0)) / entry.n_entries
+        entry.stats.drift = drift
+        if drift > self.drift_threshold:
+            entry.stats.drift_strikes += 1
+        else:
+            entry.stats.drift_strikes = 0
+        if entry.stats.drift_strikes >= self.drift_patience:
+            entry.needs_rerecord = True
+
+    def _rerecord_inline(
+        self,
+        entry: _PoolEntry,
+        graph: TaskGraph,
+        n_workers: int,
+        rt_kwargs: Dict[str, Any],
+        timeout: float,
+    ) -> Dict[int, Any]:
+        """Serve this request dynamically with instrumentation on; its
+        recording replaces the stale one (the request itself is the
+        re-record — no double execution of side-effecting task bodies)."""
+        results, recording = self._record_dynamic(graph, n_workers, rt_kwargs,
+                                                  timeout)
+        entry.stats.rerecords += 1
+        self.cache.swap(recording)
+        self._install(entry, recording)
+        return results
+
+    def _rerecord_background(
+        self,
+        entry: _PoolEntry,
+        builder: Callable[[], TaskGraph],
+        n_workers: int,
+        rt_kwargs: Dict[str, Any],
+        timeout: float,
+    ) -> None:
+        """Record the builder's twin graph off the request path, then
+        hot-swap recording + executor under the entry lock."""
+        try:
+            twin = builder()
+            _, recording = self._record_dynamic(twin, n_workers, rt_kwargs,
+                                                timeout)
+            with entry.lock:
+                with self._lock:
+                    live = any(e is entry for e in self._entries.values())
+                if not live:
+                    # the pool was shut down (or the entry evicted) while we
+                    # recorded: installing would leak an unreachable
+                    # executor's worker threads — drop the recording
+                    return
+                entry.stats.rerecords += 1
+                self.cache.swap(recording)
+                self._install(entry, recording)
+        except BaseException as e:  # noqa: BLE001 - surfaced via last_error
+            entry.last_error = e
+            with entry.lock:
+                entry.needs_rerecord = False   # do not spin on a broken twin
+        finally:
+            entry.rerecord_inflight = False

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from ..core.static_schedule import StaticSchedule
 from ..core.taskgraph import TaskGraph
@@ -89,7 +89,7 @@ class Recording:
         extra = [t for t in seen if t >= n]
         if missing or extra:
             raise RecordingError(
-                f"recording does not cover graph 1:1 "
+                "recording does not cover graph 1:1 "
                 f"(bad/missing tids {missing[:8]}, out-of-range {extra[:8]})")
 
     # ------------------------------------------------------------------

@@ -1,0 +1,323 @@
+"""Tests for the replay-serving pool (repro.replay.pool), worker-count
+remapping (repro.replay.remap), and GraphCache durability.
+
+Covers the PR-2 contract: persistent executors serve repeated same-shaped
+graphs without per-request construction; recordings remap across worker
+counts with bit-identical results; sustained plan deviation triggers
+adaptive re-recording with a hot swap into the cache; a corrupt on-disk
+cache entry is ignored and re-recorded, never fatal.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Runtime, TaskGraph, run_graph
+from repro.linalg import (
+    build_cholesky_graph,
+    build_lu_graph,
+    cholesky_extract,
+    lu_extract,
+    random_diagdom,
+    random_spd,
+    to_tiles,
+)
+from repro.replay import (
+    GraphCache,
+    Recording,
+    RemapError,
+    ReplayPool,
+    remap_recording,
+    replay_graph,
+)
+
+NB, B = 6, 16
+
+
+def _record_cholesky(workers=4, seed=1):
+    a = random_spd(NB * B, seed=seed)
+    st = to_tiles(a, B)
+    with Runtime(workers) as rt:
+        rt.run(build_cholesky_graph(NB, B, store=st), record=True)
+    return a, np.asarray(cholesky_extract(st)), rt.last_recording
+
+
+def _scrambled(rec: Recording) -> Recording:
+    bad = Recording.from_dict(rec.to_dict())
+    bad.worker_orders = [list(reversed(o)) for o in bad.worker_orders]
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# remap_recording
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("new_workers", [3, 2, 1, 5])
+def test_remap_cholesky_bit_identical(new_workers):
+    a, l_dyn, rec = _record_cholesky()
+    r2 = remap_recording(rec, new_workers)
+    assert r2.n_workers == new_workers
+    assert len(r2.worker_orders) == new_workers
+    assert r2.digest == rec.digest
+    st = to_tiles(a, B)
+    replay_graph(build_cholesky_graph(NB, B, store=st), r2)
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_remap_preserves_intra_worker_order():
+    _, _, rec = _record_cholesky()
+    r2 = remap_recording(rec, 3)
+    r2.validate_against(build_cholesky_graph(NB, B))
+    flat = {w: [e for e in o if isinstance(e, int)]
+            for w, o in enumerate(r2.worker_orders)}
+    for ow, order in enumerate(rec.worker_orders):
+        tasks = [e for e in order if isinstance(e, int)]
+        folded = flat[ow % 3]
+        positions = [folded.index(t) for t in tasks]
+        assert positions == sorted(positions), f"old worker {ow} reordered"
+
+
+def test_remap_identity_and_bad_counts():
+    _, _, rec = _record_cholesky()
+    same = remap_recording(rec, rec.n_workers)
+    assert same.to_dict() == rec.to_dict()
+    with pytest.raises(RemapError):
+        remap_recording(rec, 0)
+
+
+def test_remap_lu_gang_coplacement():
+    """Folding must keep every blocking gang on distinct workers, and the
+    gang entries must follow their repaired placement."""
+    m = random_diagdom(5 * B, seed=2)
+    st = to_tiles(m, B)
+    with Runtime(4) as rt:
+        rt.run(build_lu_graph(5, B, store=st, panel_threads=3), record=True)
+    l1, u1 = (np.asarray(x) for x in lu_extract(st))
+    rec = rt.last_recording
+    assert rec.gang_placements
+
+    r3 = remap_recording(rec, 3)
+    owner = {}
+    for w, order in enumerate(r3.worker_orders):
+        for e in order:
+            if not isinstance(e, int):
+                owner[tuple(e)] = w
+    for tid, p in r3.gang_placements.items():
+        assert len(set(p.workers)) == len(p.workers), "gang not distinct"
+        for i, w in enumerate(p.workers):
+            assert owner[(tid, i)] == w, "gang entry off its placement"
+
+    st2 = to_tiles(m, B)
+    replay_graph(build_lu_graph(5, B, store=st2, panel_threads=3), r3)
+    l2, u2 = (np.asarray(x) for x in lu_extract(st2))
+    assert (l1 == l2).all() and (u1 == u2).all()
+
+
+def test_remap_refuses_gang_wider_than_workers():
+    m = random_diagdom(5 * B, seed=3)
+    st = to_tiles(m, B)
+    with Runtime(4) as rt:
+        rt.run(build_lu_graph(5, B, store=st, panel_threads=3), record=True)
+    with pytest.raises(RemapError, match="gang"):
+        remap_recording(rt.last_recording, 2)
+
+
+# ---------------------------------------------------------------------------
+# ReplayPool: persistent serving
+# ---------------------------------------------------------------------------
+def test_pool_records_once_then_replays():
+    a = random_spd(NB * B, seed=5)
+    results = []
+    with ReplayPool(warmup_runs=0) as pool:
+        for _ in range(4):
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 4, pool=pool)
+            results.append(np.asarray(cholesky_extract(st)))
+        (stats,) = pool.describe().values()
+        assert stats["records"] == 1 and stats["replays"] == 3
+        assert len(pool) == 1
+        entry = next(iter(pool._entries.values()))
+        first_executor = entry.executor
+        st = to_tiles(a, B)
+        run_graph(build_cholesky_graph(NB, B, store=st), 4, pool=pool)
+        assert entry.executor is first_executor, "executor not persistent"
+    for r in results[1:]:
+        assert (r == results[0]).all()
+
+
+def test_pool_warmup_runs_precede_recording():
+    a = random_spd(NB * B, seed=6)
+    with ReplayPool(warmup_runs=2) as pool:
+        for _ in range(4):
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 2, pool=pool)
+        (stats,) = pool.describe().values()
+        assert stats["warmups"] == 2
+        assert stats["records"] == 1
+        assert stats["replays"] == 1
+
+
+def test_pool_adopts_shipped_recording_via_remap():
+    """A recording made at 4 workers serves a 3-worker replica with no
+    dynamic recording run (the cross-process shipment story)."""
+    a, l_dyn, rec = _record_cholesky()
+    cache = GraphCache()
+    cache.store(rec)
+    with ReplayPool(cache) as pool:
+        st = to_tiles(a, B)
+        run_graph(build_cholesky_graph(NB, B, store=st), 3, pool=pool)
+        (stats,) = pool.describe().values()
+        assert stats["remaps"] == 1
+        assert stats["records"] == 0 and stats["warmups"] == 0
+        assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+    # the remapped recording is now cached for the next 3-worker replica
+    assert cache.lookup(rec.digest, 3, rec.policy) is not None
+
+
+def test_pool_serves_multiple_shapes_and_worker_counts():
+    a = random_spd(NB * B, seed=7)
+    m = random_diagdom(4 * B, seed=7)
+    with ReplayPool(warmup_runs=0, allow_remap=False) as pool:
+        for _ in range(2):
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 2, pool=pool)
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 3, pool=pool)
+            stl = to_tiles(m, B)
+            run_graph(build_lu_graph(4, B, store=stl, panel_threads=2), 2,
+                      pool=pool)
+        assert len(pool) == 3
+        for stats in pool.describe().values():
+            assert stats["records"] == 1 and stats["replays"] == 1
+
+
+# ---------------------------------------------------------------------------
+# adaptive re-recording
+# ---------------------------------------------------------------------------
+def test_pool_rerecords_after_sustained_drift():
+    """A scrambled recording replays only through fallback steals; the pool
+    must notice the sustained drift, re-record inline on the next request,
+    and hot-swap the fresh recording into the cache."""
+    a, l_dyn, rec = _record_cholesky()
+    bad = _scrambled(rec)
+    cache = GraphCache()
+    cache.store(bad)
+    with ReplayPool(cache, drift_threshold=0.05, drift_patience=2,
+                    warmup_runs=0) as pool:
+        for i in range(4):
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 4, pool=pool)
+            assert (np.asarray(cholesky_extract(st)) == l_dyn).all(), i
+        (stats,) = pool.describe().values()
+        assert stats["rerecords"] == 1, stats
+        # post-swap runs replay the fresh recording: no more deviation
+        assert stats["drift"] < 0.05, stats
+    swapped = cache.lookup(rec.digest, 4, rec.policy)
+    assert swapped.worker_orders != bad.worker_orders
+
+
+def test_pool_background_rerecord_with_builder():
+    """With a registered side-effect-free twin builder, re-recording happens
+    off the request path and hot-swaps executor + cache entry."""
+    a, l_dyn, rec = _record_cholesky()
+    bad = _scrambled(rec)
+    cache = GraphCache()
+    cache.store(bad)
+    with ReplayPool(cache, drift_threshold=0.05, drift_patience=2,
+                    warmup_runs=0) as pool:
+        pool.register_builder(bad.digest, lambda: build_cholesky_graph(NB, B))
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            st = to_tiles(a, B)
+            run_graph(build_cholesky_graph(NB, B, store=st), 4, pool=pool)
+            assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+            (stats,) = pool.describe().values()
+            if stats["rerecords"] == 1 and stats["drift"] < 0.05:
+                break
+            time.sleep(0.01)
+        entry = next(iter(pool._entries.values()))
+        assert entry.last_error is None
+        (stats,) = pool.describe().values()
+        assert stats["rerecords"] == 1, stats
+        # every request was served by replay (never the dynamic path)
+        assert stats["replays"] == stats["requests"], stats
+    swapped = cache.lookup(rec.digest, 4, rec.policy)
+    assert swapped.worker_orders != bad.worker_orders
+
+
+# ---------------------------------------------------------------------------
+# GraphCache durability
+# ---------------------------------------------------------------------------
+def test_cache_on_disk_roundtrip_across_processes(tmp_path):
+    """A recording stored by another *process* is adopted via the on-disk
+    cache (real subprocess, not a fresh in-process GraphCache)."""
+    script = """
+import sys
+from repro.core import Runtime, TaskGraph
+from repro.replay import GraphCache
+
+g = TaskGraph("xproc")
+xs = [g.add(lambda ctx, i=i: i + 1, name=f"x{i}") for i in range(6)]
+g.add(lambda ctx: sum(ctx.dep_results()), deps=xs, name="sum")
+with Runtime(2) as rt:
+    rt.run(g, record=True)
+GraphCache(sys.argv[1]).store(rt.last_recording)
+"""
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
+        + env.get("PYTHONPATH", "")
+    subprocess.run([sys.executable, "-c", script, str(tmp_path)],
+                   env=env, check=True, timeout=120)
+
+    def mk():
+        g = TaskGraph("xproc")
+        xs = [g.add(lambda ctx, i=i: i + 1, name=f"x{i}") for i in range(6)]
+        g.add(lambda ctx: sum(ctx.dep_results()), deps=xs, name="sum")
+        return g
+
+    cache = GraphCache(tmp_path)
+    rec = cache.lookup(mk(), 2, "hybrid")
+    assert rec is not None, "shipped recording not found on disk"
+    assert replay_graph(mk(), rec) == run_graph(mk(), 2)
+
+
+@pytest.mark.parametrize("corruption", ["truncate", "garbage", "empty", "schema"])
+def test_cache_ignores_corrupt_file_and_rerecords(tmp_path, corruption):
+    a, _, rec = _record_cholesky()
+    cache = GraphCache(tmp_path)
+    ckey = cache.store(rec)
+    f = os.path.join(str(tmp_path), f"{ckey}.json")
+    blob = open(f).read()
+    with open(f, "w") as fh:
+        fh.write({"truncate": blob[:len(blob) // 2], "garbage": "{not json!",
+                  "empty": "", "schema": json.dumps({"v": 1})}[corruption])
+
+    fresh = GraphCache(tmp_path)                      # new process analogue
+    assert fresh.lookup(build_cholesky_graph(NB, B), 4, "hybrid") is None
+    assert os.path.exists(f + ".corrupt"), "bad file not quarantined"
+    # the serving path recovers by re-recording over the bad entry
+    st = to_tiles(a, B)
+    run_graph(build_cholesky_graph(NB, B, store=st), 4, cache=fresh)
+    assert fresh.lookup(build_cholesky_graph(NB, B), 4, "hybrid") is not None
+    rec2 = GraphCache(tmp_path).lookup(build_cholesky_graph(NB, B), 4, "hybrid")
+    rec2.validate_against(build_cholesky_graph(NB, B))
+
+
+def test_cache_candidates_swap_invalidate(tmp_path):
+    _, _, rec = _record_cholesky()
+    cache = GraphCache(tmp_path)
+    cache.store(rec)
+    cache.store(remap_recording(rec, 2))
+    # candidates sees both worker counts, from memory and from disk
+    assert sorted(cache.candidates(rec.digest)) == [2, 4]
+    assert sorted(GraphCache(tmp_path).candidates(rec.digest)) == [2, 4]
+    old = cache.swap(_scrambled(rec))
+    assert old is not None and old.worker_orders == rec.worker_orders
+    assert cache.invalidate(rec.digest, 2, rec.policy)
+    assert cache.lookup(rec.digest, 2, rec.policy) is None
+    assert not GraphCache(tmp_path).candidates(rec.digest).get(2)

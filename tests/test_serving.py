@@ -1,0 +1,143 @@
+"""Tests for the decode-step serving graphs (repro.models.serving) and their
+integration with run_graph(pool=...).
+
+Uses a deterministic toy decode function (real jnp ops, no model) so the
+serving loop runs fast; the full-LM path is exercised by
+benchmarks/bench_serving.py and examples/serve_lm.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import run_graph
+from repro.models import (
+    DecodeShard,
+    DecodeState,
+    build_decode_graph,
+    decode_graph_key,
+    greedy_sample,
+    shard_batch,
+)
+from repro.replay import ReplayPool, graph_key
+
+VOCAB = 11
+
+
+def _toy_decode(params, cache, tok):
+    """Deterministic toy decode: cache carries a running hash, logits rotate
+    with it — token streams are reproducible and shard-local."""
+    h = cache["h"] * 31 + tok[:, 0] + 7
+    logits = jnp.stack(
+        [jnp.sin(h[:, None] * (i + 1)).astype(jnp.float32)
+         for i in range(VOCAB)], axis=-1)
+    return {"h": h}, logits
+
+
+def _fresh_state(n_shards=4, per=1):
+    shards = [
+        DecodeShard(cache={"h": jnp.full((per,), s + 1, jnp.int32)},
+                    tok=jnp.full((per, 1), s, jnp.int32))
+        for s in range(n_shards)
+    ]
+    return DecodeState(params=None, shards=shards)
+
+
+def _decode_loop(steps, workers, pool=None, n_shards=4):
+    state = _fresh_state(n_shards)
+    for _ in range(steps):
+        g = build_decode_graph(state, _toy_decode)
+        run_graph(g, workers, pool=pool)
+    return np.asarray(state.tokens())
+
+
+def test_decode_graph_shape_is_stable_across_steps():
+    state = _fresh_state()
+    k1 = graph_key(build_decode_graph(state, _toy_decode))
+    # run a step: the state mutates, the *shape* must not
+    run_graph(build_decode_graph(state, _toy_decode), 2)
+    k2 = graph_key(build_decode_graph(state, _toy_decode))
+    assert k1 == k2
+    assert k1 == decode_graph_key(4)
+    assert k1 != decode_graph_key(2)
+
+
+def test_decode_graph_tasks_and_results():
+    state = _fresh_state(n_shards=3)
+    g = build_decode_graph(state, _toy_decode)
+    assert len(g) == 3 * 2 + 1
+    results = run_graph(g, 2)
+    gather = [t for t in g.tasks if t.name == "gather"][0]
+    assert (np.asarray(results[gather.tid]) ==
+            np.asarray(state.step_tokens)).all()
+    assert len(state.history) == 1
+    assert state.step_tokens.shape == (3, 1)
+
+
+def test_pooled_decode_matches_dynamic_bit_identical():
+    tok_dyn = _decode_loop(6, workers=2)
+    with ReplayPool() as pool:
+        tok_pool = _decode_loop(6, workers=2, pool=pool)
+        (stats,) = pool.describe().values()
+    assert tok_dyn.shape == (4, 6)
+    assert (tok_dyn == tok_pool).all()
+    assert stats["records"] == 1 and stats["warmups"] == 1
+    assert stats["replays"] == 4
+
+
+def test_pooled_decode_remap_across_worker_counts():
+    """The same decode-step recording serves 1-, 2- and 3-worker replicas
+    (pool remaps on miss), bit-identical streams throughout."""
+    ref = _decode_loop(5, workers=2)
+    with ReplayPool(warmup_runs=0) as pool:
+        assert (_decode_loop(5, workers=2, pool=pool) == ref).all()
+        assert (_decode_loop(5, workers=1, pool=pool) == ref).all()
+        assert (_decode_loop(5, workers=3, pool=pool) == ref).all()
+        by_key = pool.describe()
+    records = sum(s["records"] for s in by_key.values())
+    remaps = sum(s["remaps"] for s in by_key.values())
+    assert records == 1, by_key
+    assert remaps == 2, by_key
+
+
+def test_pool_precomputed_key_skips_hashing_not_safety():
+    """pool.run(key=...) serves the hot path without re-hashing; a wrong
+    key still fails loudly at the executor's 1:1 cover check."""
+    ref = _decode_loop(4, workers=2)
+    key = decode_graph_key(4)
+    with ReplayPool(warmup_runs=0) as pool:
+        state = _fresh_state(4)
+        for _ in range(4):
+            g = build_decode_graph(state, _toy_decode)
+            pool.run(g, 2, key=key)
+        assert (np.asarray(state.tokens()) == ref).all()
+        wrong = _fresh_state(2)
+        with pytest.raises(Exception):
+            pool.run(build_decode_graph(wrong, _toy_decode), 2, key=key)
+
+
+def test_pool_shutdown_is_terminal():
+    state = _fresh_state(2)
+    pool = ReplayPool(warmup_runs=0)
+    pool.run(build_decode_graph(state, _toy_decode), 2)
+    pool.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        pool.run(build_decode_graph(state, _toy_decode), 2)
+
+
+def test_shard_batch():
+    batch = {"tokens": jnp.arange(8).reshape(4, 2)}
+    shards = shard_batch(batch, 2)
+    assert len(shards) == 2
+    assert shards[1]["tokens"].shape == (2, 2)
+    with pytest.raises(ValueError, match="shard"):
+        shard_batch(batch, 3)
+    with pytest.raises(ValueError, match="batch"):
+        shard_batch({"a": jnp.zeros((4, 1)), "b": jnp.zeros((2, 1))}, 2)
+
+
+def test_greedy_sample_shape_and_dtype():
+    logits = jnp.stack([jnp.zeros((2, 3)), jnp.ones((2, 3))], axis=-1)
+    tok = greedy_sample(logits)
+    assert tok.shape == (2, 1) and tok.dtype == jnp.int32
+    assert (np.asarray(tok) == 1).all()
