@@ -1,15 +1,34 @@
 """Wall-clock microbenchmarks of the REAL threaded runtime (JAX CPU ops
-release the GIL): hybrid vs history victim selection on an
-overlap-structured graph, and gang vs non-gang panel regions."""
+release the GIL):
+
+* ``wallclock_overlap`` — hybrid vs history victim selection on an
+  overlap-structured graph (comm sleeps hidden behind GEMM floods);
+* ``warm_reuse`` — dynamic scheduling on one persistent ``Runtime`` (warm
+  parked workers, the unified-executor-core path) vs a fresh
+  ``Runtime`` per run (thread spawn + queue allocation per request, the
+  pre-refactor ``run_graph`` cost model).  The refactor's contract: warm
+  dynamic scheduling is no slower than per-run-thread scheduling at every
+  worker count (``no_slower`` per row, asserted by the CI smoke job).
+
+Emits CSV rows (benchmarks.common schema) and ``BENCH_runtime.json``.
+Env knobs: ``BENCH_SMOKE=1`` shrinks sizes for CI; ``BENCH_RUNTIME_JSON``
+overrides the output path.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
-from repro.core import ParallelSpec, TaskGraph, run_graph
+from repro.core import Runtime, TaskGraph, run_graph
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+WORKERS = (1, 2) if SMOKE else (1, 2, 4)
+JSON_PATH = os.environ.get("BENCH_RUNTIME_JSON", "BENCH_runtime.json")
 
 
 def overlap_graph(n_steps: int = 6, n_children: int = 8, gemm: int = 384,
@@ -43,11 +62,13 @@ def overlap_graph(n_steps: int = 6, n_children: int = 8, gemm: int = 384,
 
 
 def bench(workers: int = 4, repeats: int = 3) -> List[dict]:
+    steps, children, gemm = (3, 4, 128) if SMOKE else (6, 8, 384)
+    comm_s = 0.01 if SMOKE else 0.03
     rows = []
     for policy in ("history", "hybrid"):
         times = []
         for r in range(repeats):
-            g = overlap_graph()
+            g = overlap_graph(steps, children, gemm, comm_s)
             t0 = time.perf_counter()
             run_graph(g, workers, policy=policy, seed=r, timeout=120.0)
             times.append(time.perf_counter() - t0)
@@ -61,9 +82,70 @@ def bench(workers: int = 4, repeats: int = 3) -> List[dict]:
     return rows
 
 
+def reuse_graph(n_tasks: int = 48) -> TaskGraph:
+    """Small mixed-fanout graph of trivial bodies: per-run scheduling and
+    construction overhead dominate, which is exactly what warm reuse
+    eliminates."""
+    g = TaskGraph("reuse")
+    root = g.add(lambda ctx: 0, name="root")
+    mids = [g.add(lambda ctx, i=i: i, deps=[root], name=f"m{i}")
+            for i in range(n_tasks)]
+    g.add(lambda ctx: sum(ctx.dep_results()), deps=mids, name="join")
+    return g
+
+
+def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
+    """Best-of-``repeats`` mean per-run wall clock: a fresh Runtime per run
+    (per-run thread spawn — what every pre-refactor ``run_graph`` call
+    paid) vs one persistent Runtime serving every run on warm parked
+    workers."""
+    fresh_best = warm_best = float("inf")
+    graphs = [reuse_graph() for _ in range(iters)]
+    run_graph(graphs[0], workers)                     # warm imports/JIT paths
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for g in graphs:
+            rt = Runtime(workers)
+            with rt:
+                rt.run(g)
+        fresh_best = min(fresh_best, (time.perf_counter() - t0) / iters)
+    rt = Runtime(workers)
+    with rt:
+        rt.run(graphs[0])                             # spawn outside the clock
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for g in graphs:
+                rt.run(g)
+            warm_best = min(warm_best, (time.perf_counter() - t0) / iters)
+    return {
+        "bench": "warm_reuse", "workers": workers,
+        "fresh_ms": round(fresh_best * 1e3, 4),
+        "warm_ms": round(warm_best * 1e3, 4),
+        "speedup": round(fresh_best / warm_best, 3),
+        # generous noise headroom: the claim is "no slower", not "faster"
+        "no_slower": bool(warm_best <= fresh_best * 1.25),
+    }
+
+
+def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
+    out = {
+        "bench": "runtime",
+        "meta": {"workers": list(WORKERS), "smoke": SMOKE},
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=1)
+
+
 def main():
     from .common import emit
-    emit(bench())
+    overlap_rows = bench(workers=2 if SMOKE else 4)
+    emit(overlap_rows)
+    print()
+    reuse_rows = [bench_reuse(w) for w in WORKERS]
+    emit(reuse_rows)
+    write_json(overlap_rows + reuse_rows)
+    print(f"# wrote {JSON_PATH}")
 
 
 if __name__ == "__main__":

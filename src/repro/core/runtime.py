@@ -6,6 +6,17 @@ the GIL, so tile GEMMs genuinely run in parallel and communication thunks
 (sleeps / device transfers) genuinely overlap compute — the wall-clock
 speedups of the hybrid victim policy are measurable, not simulated.
 
+Since the unified-executor refactor, :class:`Runtime` is a thin facade: the
+worker substrate (persistent threads, park/wake, blocked-thread accounting,
+deadlock detection) is :class:`~repro.exec.core.ExecutorCore`, and the
+scheduling logic (per-worker deques, Algorithm-2 victim selection,
+Algorithm-1 gang reservation, record instrumentation) is
+:class:`~repro.exec.dynamic.DynamicDispatch`.  The replay executor and the
+serving pool run different dispatch strategies on the *same* substrate —
+one runtime, as the paper argues.  A ``Runtime`` is reusable: repeated
+:meth:`run` calls execute on the same warm parked workers with no thread
+respawn, and passing ``core=`` lets several facades share one thread set.
+
 Faithfulness to the paper:
 
 * per-worker work-stealing deques; ready tasks are pushed to the queue of
@@ -18,7 +29,7 @@ Faithfulness to the paper:
   members are guaranteed distinct workers); at the *join* barrier a gang ULT
   steals eligible work instead of idling (the paper's scheduling point);
 * non-gang regions with blocking barriers reproduce the Fig. 1 deadlock —
-  the runtime detects the all-workers-blocked state and raises
+  the core detects the all-workers-blocked state and raises
   :class:`DeadlockError` instead of hanging.
 
 Python threads cannot switch ULT stacks, so *internal* barriers of a gang
@@ -29,94 +40,24 @@ documented in DESIGN.md §2.
 
 from __future__ import annotations
 
-import itertools
-import threading
-import time
-from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
-from .gang import GangState, is_eligible_to_sched
-from .policies import make_policy
-from .simulator import DeadlockError
-from .taskgraph import ParallelSpec, Task, TaskContext, TaskGraph
-from .tracing import Trace
+from ..exec.core import ExecutorCore, GangRegion
+from ..exec.dynamic import DynamicDispatch
+from .taskgraph import TaskContext, TaskGraph
 
-
-class _Region:
-    """A running parallel region (one gang)."""
-
-    def __init__(self, rid: int, gang_id: int, nest_level: int, spec: ParallelSpec,
-                 runtime: "Runtime", spawn_task: Optional[Task]):
-        self.rid = rid
-        self.gang_id = gang_id
-        self.nest_level = nest_level
-        self.spec = spec
-        self.runtime = runtime
-        self.spawn_task = spawn_task
-        self.lock = threading.Lock()
-        self.cv = threading.Condition(self.lock)
-        self.barrier_round = 0
-        self.arrived = 0
-        self.done = 0
-        self.results: List[Any] = [None] * spec.n_threads
-
-    # -- the custom in-region barrier (paper: blocking sync inside tasks) ---
-    def barrier(self) -> None:
-        rt = self.runtime
-        with self.cv:
-            my_round = self.barrier_round
-            self.arrived += 1
-            if self.arrived == self.spec.n_threads:
-                self.arrived = 0
-                self.barrier_round += 1
-                self.cv.notify_all()
-                return
-            rt._enter_blocked()
-            try:
-                while self.barrier_round == my_round:
-                    if rt._shutdown or rt._deadlock or rt._failure:
-                        raise DeadlockError(rt._deadlock or "runtime aborted during barrier")
-                    if not self.cv.wait(timeout=rt.block_poll):
-                        rt._check_deadlock()
-            finally:
-                rt._exit_blocked()
-
-    def thread_done(self, tid: int, result: Any) -> bool:
-        with self.cv:
-            self.results[tid] = result
-            self.done += 1
-            finished = self.done == self.spec.n_threads
-            if finished:
-                self.cv.notify_all()
-            return finished
-
-    @property
-    def finished(self) -> bool:
-        return self.done == self.spec.n_threads
-
-
-class _GangULT:
-    __slots__ = ("region", "thread_num")
-
-    def __init__(self, region: _Region, thread_num: int):
-        self.region = region
-        self.thread_num = thread_num
-
-    @property
-    def gang_id(self) -> int:
-        return self.region.gang_id
-
-    @property
-    def nest_level(self) -> int:
-        return self.region.nest_level
-
-
-class _WorkerState(threading.local):
-    pass
+__all__ = ["Runtime", "run_graph"]
 
 
 class Runtime:
-    """The integrated runtime (HClib-OMP analogue)."""
+    """The integrated runtime (HClib-OMP analogue) — dynamic-dispatch facade
+    over the shared :class:`~repro.exec.core.ExecutorCore`.
+
+    ``core=`` injects a shared substrate (e.g. the serving pool's
+    per-worker-count core); the runtime then *leases* those warm workers and
+    :meth:`shutdown` leaves them running for the next lessee.  Without it
+    the runtime owns a private core, shut down with the facade.
+    """
 
     def __init__(
         self,
@@ -128,7 +69,12 @@ class Runtime:
         steal_backoff: float = 20e-6,
         block_poll: float = 0.05,
         trace: bool = False,
+        core: Optional[ExecutorCore] = None,
     ):
+        if core is not None and core.n_workers != n_workers:
+            raise ValueError(
+                f"shared core has {core.n_workers} workers, runtime wants "
+                f"{n_workers}")
         self.n_workers = n_workers
         self.policy_name = policy
         self.gang_default = gang_default
@@ -136,71 +82,32 @@ class Runtime:
         self.steal_backoff = steal_backoff
         self.block_poll = block_poll
         self.trace_enabled = trace
-        self.trace = Trace(n_workers)
 
-        self._fork_lock = threading.Lock()          # the paper's fork-phase lock
-        self.gang_state = GangState(n_workers)
-        self._region_ids = itertools.count()
-
-        self._locals: List[Deque[Task]] = [deque() for _ in range(n_workers)]
-        self._local_locks = [threading.Lock() for _ in range(n_workers)]
-        self._gang_deqs: List[Deque[_GangULT]] = [deque() for _ in range(n_workers)]
-        self._gang_locks = [threading.Lock() for _ in range(n_workers)]
-        self._policies = [make_policy(policy, w, n_workers, seed) for w in range(n_workers)]
-
-        # worker context stacks: list of (gang_id, nest_level)
-        self._contexts: List[List[Tuple[int, int]]] = [[] for _ in range(n_workers)]
-
-        self._results: Dict[int, Any] = {}
-        self._results_lock = threading.Lock()
-        self._graph: Optional[TaskGraph] = None
-        self._indeg: List[int] = []
-        self._indeg_lock = threading.Lock()
-        self._remaining = 0
-        self._done_cv = threading.Condition()
-
-        self._blocked_count = 0
-        self._blocked_lock = threading.Lock()
-        self._shutdown = False
-        self._deadlock: Optional[str] = None
-        self._failure: Optional[BaseException] = None
-
-        self._threads: List[threading.Thread] = []
-        self._tls = _WorkerState()
-        self._started = False
-        self._work_available = threading.Condition()
-
-        # record-and-replay instrumentation (repro.replay); populated by
-        # run(record=True) — cold path, None otherwise
-        self._recording = False
-        self._rec_entries: List[List[Any]] = []
-        self._rec_steals: List[List[Tuple[int, Any]]] = []
-        self._rec_forks: List[Tuple[int, int, int]] = []
-        self._rec_comms: List[int] = []
-        self._rec_comm_lock = threading.Lock()
+        self._core = core if core is not None else ExecutorCore(
+            n_workers, block_poll=block_poll, name="repro-worker")
+        self._owns_core = core is None
+        self._dispatch = DynamicDispatch(
+            n_workers, policy=policy, gang_default=gang_default, seed=seed,
+            steal_backoff=steal_backoff, trace=trace)
+        self.trace = self._dispatch.trace
         self.last_recording = None
 
     # ------------------------------------------------------------------
     # lifecycle
+    @property
+    def core(self) -> ExecutorCore:
+        return self._core
+
+    @property
+    def gang_state(self):
+        return self._dispatch.gang_state
+
     def start(self) -> None:
-        if self._started:
-            return
-        self._started = True
-        for w in range(self.n_workers):
-            th = threading.Thread(target=self._worker_main, args=(w,), daemon=True,
-                                  name=f"repro-worker-{w}")
-            self._threads.append(th)
-            th.start()
+        self._core.start()
 
     def shutdown(self) -> None:
-        self._shutdown = True
-        with self._work_available:
-            self._work_available.notify_all()
-        for th in self._threads:
-            th.join(timeout=5.0)
-        self._threads.clear()
-        self._started = False
-        self._shutdown = False
+        if self._owns_core:
+            self._core.shutdown()
 
     def __enter__(self) -> "Runtime":
         self.start()
@@ -215,332 +122,37 @@ class Runtime:
             record: bool = False) -> Dict[int, Any]:
         """Execute the graph; returns {tid: result}.  Raises DeadlockError if
         the Fig. 1 state is reached, or re-raises the first task failure.
+        Repeated calls reuse the same warm worker threads.
 
         With ``record=True`` the run is instrumented (per-worker execution
         order, steals, gang placements and fork order) and a
         :class:`repro.replay.Recording` is left in ``self.last_recording``
         for the replay executor / graph cache."""
         graph.validate()
-        if not self._started:
-            self.start()
-        self._graph = graph
-        self._indeg = graph.indegrees()
-        self._results = {}
-        self._deadlock = None
-        self._failure = None
-        self._recording = record
-        if record:
-            self._rec_entries = [[] for _ in range(self.n_workers)]
-            self._rec_steals = [[] for _ in range(self.n_workers)]
-            self._rec_forks = []
-            self._rec_comms = []
-        with self._done_cv:
-            self._remaining = len(graph)
-        # master thread (worker 0's queue) receives the roots
-        for t in graph.roots():
-            self._push_local(0, t)
-        self._notify_work()
-
-        deadline = time.monotonic() + timeout
-        with self._done_cv:
-            while self._remaining > 0:
-                if self._deadlock:
-                    raise DeadlockError(self._deadlock)
-                if self._failure:
-                    raise self._failure
-                if not self._done_cv.wait(timeout=0.05):
-                    if time.monotonic() > deadline:
-                        raise TimeoutError(
-                            f"graph {graph.name!r} did not finish within {timeout}s "
-                            f"({self._remaining} tasks left)")
-        if self._failure:
-            raise self._failure
-        if record:
-            self.last_recording = self._build_recording(graph)
-            self._recording = False
-        return dict(self._results)
-
-    def _build_recording(self, graph: TaskGraph):
-        """Assemble a replay Recording from the instrumentation buffers."""
-        from ..replay.recording import GangPlacement, Recording
-        from ..replay.graph_key import graph_key
-
-        placements: Dict[int, GangPlacement] = {}
-        for spawn_tid, gang_id, n_threads in self._rec_forks:
-            if spawn_tid in placements:
-                # recordings key regions by spawning task; two forks from one
-                # task would be indistinguishable on replay — refuse loudly
-                raise ValueError(
-                    f"task {spawn_tid} forked more than one parallel region; "
-                    "record-and-replay supports one region per task")
-            placements[spawn_tid] = GangPlacement(
-                spawn_tid, gang_id, [-1] * n_threads)
-        for w, entries in enumerate(self._rec_entries):
-            for e in entries:
-                if isinstance(e, tuple) and e[0] in placements:
-                    placements[e[0]].workers[e[1]] = w
-        steals = [(w, victim, e)
-                  for w, lst in enumerate(self._rec_steals)
-                  for victim, e in lst]
-        return Recording(
-            digest=graph_key(graph).digest,
-            graph_name=graph.name,
-            n_workers=self.n_workers,
-            policy=self.policy_name,
-            worker_orders=[list(e) for e in self._rec_entries],
-            gang_placements=placements,
-            gang_issue_order=[f[0] for f in self._rec_forks],
-            steals=steals,
-            collective_order=list(self._rec_comms),
-            source="dynamic",
-        )
-
-    # ------------------------------------------------------------------
-    # queues
-    def _push_local(self, w: int, task: Task) -> None:
-        with self._local_locks[w]:
-            self._locals[w].append(task)
-
-    def _pop_local(self, w: int) -> Optional[Task]:
-        with self._local_locks[w]:
-            dq = self._locals[w]
-            if not dq:
-                return None
-            # priority-aware LIFO pop (bounded scan, paper's priority clause)
-            best_i, best_p = len(dq) - 1, dq[-1].priority
-            for i in range(len(dq) - 1, max(-1, len(dq) - 9), -1):
-                if dq[i].priority > best_p:
-                    best_i, best_p = i, dq[i].priority
-            t = dq[best_i]
-            del dq[best_i]
-            return t
-
-    def _steal_local(self, victim: int) -> Optional[Task]:
-        with self._local_locks[victim]:
-            dq = self._locals[victim]
-            return dq.popleft() if dq else None
-
-    def _pop_gang(self, thief: int, victim: int) -> Optional[_GangULT]:
-        ctx = self._contexts[thief]
-        cur_gang, cur_nest = (ctx[-1] if ctx else (-1, 0))
-        with self._gang_locks[victim]:
-            dq = self._gang_deqs[victim]
-            if not dq:
-                return None
-            head = dq[0]
-            if is_eligible_to_sched(head.gang_id, head.nest_level, cur_gang, cur_nest):
-                return dq.popleft()
-            return None
-
-    def _notify_work(self) -> None:
-        with self._work_available:
-            self._work_available.notify_all()
-
-    # ------------------------------------------------------------------
-    # worker loop
-    def _worker_main(self, w: int) -> None:
-        self._tls.wid = w
-        while not self._shutdown:
-            progressed = self._schedule_once(w)
-            if not progressed:
-                with self._work_available:
-                    self._work_available.wait(timeout=self.steal_backoff * 50)
-
-    def _schedule_once(self, w: int, eligible_only: bool = True) -> bool:
-        """One scheduling point: gang deque > local deque > steal.  Returns
-        True if a unit of work was executed."""
-        if self._failure is not None or self._deadlock is not None:
-            return False
-        ult = self._pop_gang(w, w)
-        if ult is not None:
-            self._run_gang_ult(w, ult)
-            return True
-        task = self._pop_local(w)
-        if task is not None:
-            self._run_task(w, task)
-            return True
-        # work stealing (Algorithm 2 policy)
-        pol = self._policies[w]
-        victim = pol.select()
-        got: Any = None
-        if victim != w:
-            got = self._pop_gang(w, victim)
-            if got is None:
-                got = self._steal_local(victim)
-        pol.record(victim, got is not None)
-        if got is None:
-            return False
-        if self._recording:
-            entry = (got.region.spawn_task.tid, got.thread_num) \
-                if isinstance(got, _GangULT) and got.region.spawn_task is not None \
-                else (got.tid if not isinstance(got, _GangULT) else None)
-            if entry is not None:
-                self._rec_steals[w].append((victim, entry))
-        if isinstance(got, _GangULT):
-            self._run_gang_ult(w, got)
-        else:
-            self._run_task(w, got)
-        return True
-
-    # ------------------------------------------------------------------
-    # task execution
-    def _run_task(self, w: int, task: Task) -> None:
-        t0 = time.perf_counter()
-        if self._recording:
-            # per-worker list, appended only by worker w: start order, no lock
-            self._rec_entries[w].append(task.tid)
-            if task.kind == "comm":
-                with self._rec_comm_lock:
-                    self._rec_comms.append(task.tid)
-        ctx = TaskContext(self._graph, task, self._results, runtime=self)
-        ctx.worker_id = w  # type: ignore[attr-defined]
+        self._dispatch.set_recording(record)
         try:
-            result = task.fn(ctx) if task.fn is not None else None
-        except BaseException as e:  # noqa: BLE001 - propagate to run()
-            self._failure = e
-            with self._done_cv:
-                self._done_cv.notify_all()
-            return
-        t1 = time.perf_counter()
-        if self.trace_enabled:
-            self.trace.record(w, t0, t1, task.kind, task.name)
-        with self._results_lock:
-            self._results[task.tid] = result
-        self._complete(w, task)
-
-    def _complete(self, w: int, task: Task) -> None:
-        newly_ready: List[Task] = []
-        with self._indeg_lock:
-            for s in self._graph.successors(task):
-                self._indeg[s.tid] -= 1
-                if self._indeg[s.tid] == 0:
-                    newly_ready.append(s)
-        for s in newly_ready:
-            self._push_local(w, s)
-        if newly_ready:
-            self._notify_work()
-        with self._done_cv:
-            self._remaining -= 1
-            if self._remaining <= 0:
-                self._done_cv.notify_all()
+            results = self._core.run(self._dispatch, graph, timeout=timeout)
+            if record:
+                self.last_recording = self._dispatch.build_recording(graph)
+            return results
+        finally:
+            self._dispatch.set_recording(False)
 
     # ------------------------------------------------------------------
     # parallel regions (called from task bodies via ctx.parallel)
     def parallel(
         self,
         n_threads: int,
-        body: Callable[[int, "_Region"], Any],
+        body: Callable[[int, GangRegion], Any],
         *,
         gang: Optional[bool] = None,
         spawn_ctx: Optional[TaskContext] = None,
     ) -> List[Any]:
         """Fork a parallel region of ``n_threads`` ULTs running
         ``body(thread_num, region)``; join and return per-thread results.
-        ``region.barrier()`` is the blocking in-region barrier.
-
-        Gang regions (default) are scheduled per Algorithm 1.  Non-gang
-        regions push all ULTs to the calling worker's queue — combined with
-        blocking barriers this reproduces the Fig. 1 deadlock, which the
-        runtime detects."""
-        w = getattr(self._tls, "wid", 0)
-        use_gang = self.gang_default if gang is None else gang
-        if use_gang and n_threads > self.n_workers:
-            # Blocking synchronization requires every gang member on a
-            # distinct kernel thread (no ULT stack switching in Python) —
-            # same constraint OpenMP has for its thread teams.
-            raise ValueError(
-                f"gang region requests {n_threads} ULTs but only "
-                f"{self.n_workers} workers exist; blocking barriers would deadlock")
-        ctx_stack = self._contexts[w]
-        nest_level = (ctx_stack[-1][1] if ctx_stack else 0) + 1
-        spec = ParallelSpec(n_threads=n_threads, body=body, gang=use_gang)
-
-        spawn_task = spawn_ctx.task if spawn_ctx is not None else None
-        with self._fork_lock:   # the paper's serialized fork phase
-            gang_id = self.gang_state.next_gang_id() if use_gang else -1
-            region = _Region(next(self._region_ids), gang_id, nest_level, spec, self,
-                             spawn_task=spawn_task)
-            if self._recording and spawn_task is not None:
-                # fork lock => globally ordered by gang id (issue order)
-                self._rec_forks.append((spawn_task.tid, gang_id, n_threads))
-            if use_gang:
-                reserved = self.gang_state.get_workers(w, n_threads)
-                self.gang_state.account_gang([reserved[i % len(reserved)] for i in range(n_threads)])
-                for i in range(n_threads):
-                    target = reserved[i % len(reserved)]
-                    with self._gang_locks[target]:
-                        self._gang_deqs[target].append(_GangULT(region, i))
-            else:
-                for i in range(n_threads):
-                    with self._gang_locks[w]:
-                        self._gang_deqs[w].append(_GangULT(region, i))
-        self._notify_work()
-
-        # join: the spawning worker helps out at this scheduling point —
-        # paper: gang ULTs at a join barrier steal (eligible) work.
-        while not region.finished:
-            if self._shutdown or self._deadlock or self._failure:
-                raise DeadlockError(self._deadlock or "runtime aborted during join")
-            progressed = self._schedule_once(w)
-            if not progressed and not region.finished:
-                # join-waiters retry stealing, so they are NOT counted as
-                # hard-blocked (only blocking barriers are) — but they do
-                # poll the detector for barrier deadlocks elsewhere.
-                with region.cv:
-                    if not region.finished:
-                        if not region.cv.wait(timeout=self.block_poll):
-                            self._check_deadlock()
-        return list(region.results)
-
-    def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
-        region = ult.region
-        if self._recording and region.spawn_task is not None:
-            self._rec_entries[w].append((region.spawn_task.tid, ult.thread_num))
-        self._contexts[w].append((region.gang_id, region.nest_level))
-        t0 = time.perf_counter()
-        try:
-            result = region.spec.body(ult.thread_num, region)
-        except BaseException as e:  # noqa: BLE001
-            self._failure = e
-            with self._done_cv:
-                self._done_cv.notify_all()
-            return
-        finally:
-            self._contexts[w].pop()
-            if region.gang_id >= 0:
-                with self._fork_lock:
-                    self.gang_state.release_gang_thread(w)
-        t1 = time.perf_counter()
-        if self.trace_enabled:
-            self.trace.record(w, t0, t1, "panel", f"r{region.rid}.t{ult.thread_num}")
-        region.thread_done(ult.thread_num, result)
-
-    # ------------------------------------------------------------------
-    # deadlock detection: all workers blocked on barriers/joins while work
-    # remains that only they could run
-    def _enter_blocked(self) -> None:
-        with self._blocked_lock:
-            self._blocked_count += 1
-
-    def _exit_blocked(self) -> None:
-        with self._blocked_lock:
-            self._blocked_count -= 1
-
-    def _check_deadlock(self) -> None:
-        """The Fig. 1 state: every worker is stuck inside a *blocking*
-        barrier (kernel-thread semantics — cannot schedule anything) while
-        the ULTs that would satisfy those barriers sit starved in queues."""
-        with self._blocked_lock:
-            blocked = self._blocked_count
-        if blocked < self.n_workers:
-            return
-        queued = sum(len(d) for d in self._gang_deqs) + sum(len(d) for d in self._locals)
-        msg = (f"deadlock: all {blocked} workers blocked at blocking barriers; "
-               f"{queued} ULT(s)/task(s) starved")
-        self._deadlock = msg
-        with self._done_cv:
-            self._done_cv.notify_all()
-        raise DeadlockError(msg)
+        Delegates to the dynamic dispatch (Algorithm 1)."""
+        return self._dispatch.parallel(n_threads, body, gang=gang,
+                                       spawn_ctx=spawn_ctx)
 
 
 def run_graph(
@@ -562,12 +174,13 @@ def run_graph(
     Record-and-replay hooks (see :mod:`repro.replay`):
 
     * ``pool`` — a :class:`~repro.replay.ReplayPool`: serve the execution
-      from a persistent per-shape executor (records on first sight, replays
-      after, adaptively re-records on drift).  The serving-loop path: no
-      per-request runtime or executor construction.  ``gang_default`` and
-      ``seed`` are forwarded to the pool's dynamic warmup/recording runs;
-      ``record``/``replay``/``cache``/``trace`` are the pool's own business
-      and rejected when combined with it;
+      from a persistent per-shape dispatch leasing a shared worker core
+      (records on first sight, replays after, adaptively re-records on
+      drift).  The serving-loop path: no per-request runtime or executor
+      construction.  ``gang_default`` and ``seed`` are forwarded to the
+      pool's dynamic warmup/recording runs; ``record``/``replay``/``cache``/
+      ``trace`` are the pool's own business and rejected when combined with
+      it;
     * ``replay`` — a :class:`~repro.replay.Recording`: skip the dynamic
       scheduler entirely and replay the graph on a
       :class:`~repro.replay.ReplayExecutor`;

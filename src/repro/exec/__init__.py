@@ -1,0 +1,33 @@
+"""Unified executor core: one worker substrate under every scheduler.
+
+:class:`ExecutorCore` owns persistent worker threads (park/wake between
+runs), unified :class:`GangRegion` parallel regions (blocking barriers with
+centralized blocked-thread accounting and Fig.-1 deadlock detection), and a
+pluggable :class:`DispatchStrategy`:
+
+* :class:`DynamicDispatch` — per-worker work-stealing deques, Algorithm-2
+  victim selection, Algorithm-1 gang reservation (+ record-and-replay
+  instrumentation);
+* :class:`ReplayDispatch` — preallocated run lists, recorded gang
+  placements with monotonic issue order, run-ahead and stall-triggered
+  dynamic fallback.
+
+The public entry points remain the facades:
+:class:`~repro.core.runtime.Runtime` (dynamic),
+:class:`~repro.replay.executor.ReplayExecutor` (replay) and
+:class:`~repro.replay.pool.ReplayPool` (serving) — all three lease worker
+time from this substrate.
+"""
+
+from .core import DispatchStrategy, ExecutorCore, GangRegion
+from .dynamic import DynamicDispatch
+from .replay import ReplayDispatch, ReplayError
+
+__all__ = [
+    "DispatchStrategy",
+    "DynamicDispatch",
+    "ExecutorCore",
+    "GangRegion",
+    "ReplayDispatch",
+    "ReplayError",
+]

@@ -1,0 +1,414 @@
+"""Dynamic dispatch: work-stealing deques + Algorithm-1 gang scheduling.
+
+The scheduling brain of the paper's integrated runtime, extracted from the
+old monolithic ``Runtime`` so it runs on the shared
+:class:`~repro.exec.core.ExecutorCore` substrate:
+
+* per-worker work-stealing deques; ready tasks are pushed to the queue of
+  the worker that resolved their last dependency (paper §2.1);
+* Algorithm 2 victim selection (``history`` / ``random`` / ``hybrid``);
+* Algorithm 1 gang scheduling: parallel regions spawned by tasks are
+  gang-scheduled onto reserved workers under the fork lock with a monotonic
+  gang id; gang ULTs are stealable subject to ``is_eligible_to_sched``;
+* region barriers: gang regions may use *blocking* barriers safely (all
+  members are guaranteed distinct workers); at the *join* barrier a gang
+  ULT steals eligible work instead of idling (the paper's scheduling
+  point); non-gang regions with blocking barriers reproduce the Fig. 1
+  deadlock, which the core's detector raises as
+  :class:`~repro.core.simulator.DeadlockError`.
+
+Record-and-replay instrumentation (per-worker start orders, steals, gang
+placements, fork order) lives here too: recording is a property of the
+*dynamic* schedule, not of the substrate.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from ..core.gang import GangState, is_eligible_to_sched
+from ..core.policies import make_policy
+from ..core.simulator import DeadlockError
+from ..core.taskgraph import Task, TaskContext, TaskGraph
+from ..core.tracing import Trace
+from .core import DispatchStrategy, ExecutorCore, GangRegion
+
+
+class _GangULT:
+    __slots__ = ("region", "thread_num")
+
+    def __init__(self, region: GangRegion, thread_num: int):
+        self.region = region
+        self.thread_num = thread_num
+
+    @property
+    def gang_id(self) -> int:
+        return self.region.gang_id
+
+    @property
+    def nest_level(self) -> int:
+        return self.region.nest_level
+
+
+class DynamicDispatch(DispatchStrategy):
+    """Work-stealing + gang-scheduling dispatch (the paper's scheduler)."""
+
+    def __init__(
+        self,
+        n_workers: int,
+        *,
+        policy: str = "hybrid",
+        gang_default: bool = True,
+        seed: int = 0,
+        steal_backoff: float = 20e-6,
+        trace: bool = False,
+    ):
+        self.core: Optional[ExecutorCore] = None
+        self.n_workers = n_workers
+        self.policy_name = policy
+        self.gang_default = gang_default
+        self.seed = seed
+        self.steal_backoff = steal_backoff
+        self.trace_enabled = trace
+        self.trace = Trace(n_workers)
+
+        self._fork_lock = threading.Lock()          # the paper's fork-phase lock
+        self.gang_state = GangState(n_workers)
+        self._region_ids = itertools.count()
+
+        self._locals: List[Deque[Task]] = [deque() for _ in range(n_workers)]
+        self._local_locks = [threading.Lock() for _ in range(n_workers)]
+        self._gang_deqs: List[Deque[_GangULT]] = [deque() for _ in range(n_workers)]
+        self._gang_locks = [threading.Lock() for _ in range(n_workers)]
+        self._policies = [make_policy(policy, w, n_workers, seed)
+                          for w in range(n_workers)]
+
+        # worker context stacks: list of (gang_id, nest_level)
+        self._contexts: List[List[Tuple[int, int]]] = [[] for _ in range(n_workers)]
+
+        self._graph: Optional[TaskGraph] = None
+        self._indeg: List[int] = []
+        self._indeg_lock = threading.Lock()
+        self._results: Dict[int, Any] = {}
+        self._results_lock = threading.Lock()
+        self._remaining = 0
+        self._remaining_lock = threading.Lock()
+        self._work_available = threading.Condition()
+
+        # record-and-replay instrumentation; populated when recording is on
+        self._recording = False
+        self._rec_entries: List[List[Any]] = []
+        self._rec_steals: List[List[Tuple[int, Any]]] = []
+        self._rec_forks: List[Tuple[int, int, int]] = []
+        self._rec_comms: List[int] = []
+        self._rec_comm_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # DispatchStrategy interface
+    def set_recording(self, record: bool) -> None:
+        self._recording = record
+
+    def begin_run(self, graph: TaskGraph) -> None:
+        self._graph = graph
+        self._indeg = graph.indegrees()
+        self._results = {}
+        self._remaining = len(graph)
+        # a previous aborted run may have left stale queue entries / context;
+        # discarded gang ULTs must also release their GangState accounting
+        # or get_workers' load balancing skews forever on a reused runtime
+        for dq in self._locals:
+            dq.clear()
+        for w, dq in enumerate(self._gang_deqs):
+            for ult in dq:
+                if ult.region.gang_id >= 0:
+                    self.gang_state.release_gang_thread(w)
+            dq.clear()
+        self._contexts = [[] for _ in range(self.n_workers)]
+        if self._recording:
+            self._rec_entries = [[] for _ in range(self.n_workers)]
+            self._rec_steals = [[] for _ in range(self.n_workers)]
+            self._rec_forks = []
+            self._rec_comms = []
+        # master thread (worker 0's queue) receives the roots
+        for t in graph.roots():
+            self._locals[0].append(t)
+
+    @property
+    def drained(self) -> bool:
+        return self._remaining <= 0
+
+    def results(self) -> Dict[int, Any]:
+        return dict(self._results)
+
+    def pending_units(self) -> int:
+        return (sum(len(d) for d in self._gang_deqs)
+                + sum(len(d) for d in self._locals))
+
+    def wake_all(self) -> None:
+        with self._work_available:
+            self._work_available.notify_all()
+
+    def worker_loop(self, w: int) -> None:
+        core = self.core
+        while not self.drained and not core.aborted:
+            progressed = self.schedule_once(w)
+            if not progressed:
+                with self._work_available:
+                    if self.drained or core.aborted:
+                        return
+                    self._work_available.wait(timeout=self.steal_backoff * 50)
+
+    # ------------------------------------------------------------------
+    # queues
+    def _push_local(self, w: int, task: Task) -> None:
+        with self._local_locks[w]:
+            self._locals[w].append(task)
+
+    def _pop_local(self, w: int) -> Optional[Task]:
+        with self._local_locks[w]:
+            dq = self._locals[w]
+            if not dq:
+                return None
+            # priority-aware LIFO pop (bounded scan, paper's priority clause)
+            best_i, best_p = len(dq) - 1, dq[-1].priority
+            for i in range(len(dq) - 1, max(-1, len(dq) - 9), -1):
+                if dq[i].priority > best_p:
+                    best_i, best_p = i, dq[i].priority
+            t = dq[best_i]
+            del dq[best_i]
+            return t
+
+    def _steal_local(self, victim: int) -> Optional[Task]:
+        with self._local_locks[victim]:
+            dq = self._locals[victim]
+            return dq.popleft() if dq else None
+
+    def _pop_gang(self, thief: int, victim: int) -> Optional[_GangULT]:
+        ctx = self._contexts[thief]
+        cur_gang, cur_nest = (ctx[-1] if ctx else (-1, 0))
+        with self._gang_locks[victim]:
+            dq = self._gang_deqs[victim]
+            if not dq:
+                return None
+            head = dq[0]
+            if is_eligible_to_sched(head.gang_id, head.nest_level, cur_gang, cur_nest):
+                return dq.popleft()
+            return None
+
+    def _notify_work(self) -> None:
+        with self._work_available:
+            self._work_available.notify_all()
+
+    # ------------------------------------------------------------------
+    # scheduling
+    def schedule_once(self, w: int) -> bool:
+        """One scheduling point: gang deque > local deque > steal.  Returns
+        True if a unit of work was executed."""
+        if self.core.aborted:
+            return False
+        ult = self._pop_gang(w, w)
+        if ult is not None:
+            self._run_gang_ult(w, ult)
+            return True
+        task = self._pop_local(w)
+        if task is not None:
+            self._run_task(w, task)
+            return True
+        # work stealing (Algorithm 2 policy)
+        pol = self._policies[w]
+        victim = pol.select()
+        got: Any = None
+        if victim != w:
+            got = self._pop_gang(w, victim)
+            if got is None:
+                got = self._steal_local(victim)
+        pol.record(victim, got is not None)
+        if got is None:
+            return False
+        if self._recording:
+            entry = (got.region.spawn_tid, got.thread_num) \
+                if isinstance(got, _GangULT) and got.region.spawn_task is not None \
+                else (got.tid if not isinstance(got, _GangULT) else None)
+            if entry is not None:
+                self._rec_steals[w].append((victim, entry))
+        if isinstance(got, _GangULT):
+            self._run_gang_ult(w, got)
+        else:
+            self._run_task(w, got)
+        return True
+
+    # ------------------------------------------------------------------
+    # task execution
+    def _run_task(self, w: int, task: Task) -> None:
+        t0 = time.perf_counter()
+        if self._recording:
+            # per-worker list, appended only by worker w: start order, no lock
+            self._rec_entries[w].append(task.tid)
+            if task.kind == "comm":
+                with self._rec_comm_lock:
+                    self._rec_comms.append(task.tid)
+        ctx = TaskContext(self._graph, task, self._results, runtime=self)
+        ctx.worker_id = w  # type: ignore[attr-defined]
+        try:
+            result = task.fn(ctx) if task.fn is not None else None
+        except BaseException as e:  # noqa: BLE001 - propagate to run()
+            self.core.fail(e)
+            return
+        t1 = time.perf_counter()
+        if self.trace_enabled:
+            self.trace.record(w, t0, t1, task.kind, task.name)
+        with self._results_lock:
+            self._results[task.tid] = result
+        self._complete(w, task)
+
+    def _complete(self, w: int, task: Task) -> None:
+        newly_ready: List[Task] = []
+        with self._indeg_lock:
+            for s in self._graph.successors(task):
+                self._indeg[s.tid] -= 1
+                if self._indeg[s.tid] == 0:
+                    newly_ready.append(s)
+        for s in newly_ready:
+            self._push_local(w, s)
+        if newly_ready:
+            self._notify_work()
+        with self._remaining_lock:
+            self._remaining -= 1
+            done = self._remaining <= 0
+        if done:
+            self.core.signal_done()
+            # kick idle workers out of their backoff naps so the core is
+            # immediately quiescent for the next run
+            self._notify_work()
+
+    # ------------------------------------------------------------------
+    # parallel regions (TaskContext.parallel delegates here)
+    def parallel(
+        self,
+        n_threads: int,
+        body: Callable[[int, GangRegion], Any],
+        *,
+        gang: Optional[bool] = None,
+        spawn_ctx: Optional[TaskContext] = None,
+    ) -> List[Any]:
+        """Fork a parallel region of ``n_threads`` ULTs running
+        ``body(thread_num, region)``; join and return per-thread results.
+        ``region.barrier()`` is the blocking in-region barrier.
+
+        Gang regions (default) are scheduled per Algorithm 1.  Non-gang
+        regions push all ULTs to the calling worker's queue — combined with
+        blocking barriers this reproduces the Fig. 1 deadlock, which the
+        core detects."""
+        core = self.core
+        w = core.worker_id()
+        use_gang = self.gang_default if gang is None else gang
+        if use_gang and n_threads > self.n_workers:
+            # Blocking synchronization requires every gang member on a
+            # distinct kernel thread (no ULT stack switching in Python) —
+            # same constraint OpenMP has for its thread teams.
+            raise ValueError(
+                f"gang region requests {n_threads} ULTs but only "
+                f"{self.n_workers} workers exist; blocking barriers would deadlock")
+        ctx_stack = self._contexts[w]
+        nest_level = (ctx_stack[-1][1] if ctx_stack else 0) + 1
+
+        spawn_task = spawn_ctx.task if spawn_ctx is not None else None
+        with self._fork_lock:   # the paper's serialized fork phase
+            gang_id = self.gang_state.next_gang_id() if use_gang else -1
+            region = GangRegion(
+                core, n_threads, gang_id=gang_id, nest_level=nest_level,
+                rid=next(self._region_ids), spawn_task=spawn_task, body=body)
+            if self._recording and spawn_task is not None:
+                # fork lock => globally ordered by gang id (issue order)
+                self._rec_forks.append((spawn_task.tid, gang_id, n_threads))
+            if use_gang:
+                reserved = self.gang_state.get_workers(w, n_threads)
+                self.gang_state.account_gang(
+                    [reserved[i % len(reserved)] for i in range(n_threads)])
+                for i in range(n_threads):
+                    target = reserved[i % len(reserved)]
+                    with self._gang_locks[target]:
+                        self._gang_deqs[target].append(_GangULT(region, i))
+            else:
+                for i in range(n_threads):
+                    with self._gang_locks[w]:
+                        self._gang_deqs[w].append(_GangULT(region, i))
+        self._notify_work()
+
+        # join: the spawning worker helps out at this scheduling point —
+        # paper: gang ULTs at a join barrier steal (eligible) work.
+        while not region.finished:
+            if core.aborted:
+                raise DeadlockError(core.abort_reason())
+            progressed = self.schedule_once(w)
+            if not progressed and not region.finished:
+                # join-waiters retry stealing, so they are NOT counted as
+                # hard-blocked (only blocking barriers are) — but they do
+                # poll the detector for barrier deadlocks elsewhere.
+                with region.cv:
+                    if not region.finished:
+                        if not region.cv.wait(timeout=core.block_poll):
+                            core.check_deadlock()
+        return list(region.results)
+
+    def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
+        region = ult.region
+        if self._recording and region.spawn_task is not None:
+            self._rec_entries[w].append((region.spawn_tid, ult.thread_num))
+        self._contexts[w].append((region.gang_id, region.nest_level))
+        t0 = time.perf_counter()
+        try:
+            result = region.body(ult.thread_num, region)
+        except BaseException as e:  # noqa: BLE001
+            self.core.fail(e)
+            return
+        finally:
+            self._contexts[w].pop()
+            if region.gang_id >= 0:
+                with self._fork_lock:
+                    self.gang_state.release_gang_thread(w)
+        t1 = time.perf_counter()
+        if self.trace_enabled:
+            self.trace.record(w, t0, t1, "panel", f"r{region.rid}.t{ult.thread_num}")
+        region.thread_done(ult.thread_num, result)
+
+    # ------------------------------------------------------------------
+    # recording assembly (record-and-replay, repro.replay)
+    def build_recording(self, graph: TaskGraph):
+        """Assemble a replay Recording from the instrumentation buffers."""
+        from ..replay.graph_key import graph_key
+        from ..replay.recording import GangPlacement, Recording
+
+        placements: Dict[int, GangPlacement] = {}
+        for spawn_tid, gang_id, n_threads in self._rec_forks:
+            if spawn_tid in placements:
+                # recordings key regions by spawning task; two forks from one
+                # task would be indistinguishable on replay — refuse loudly
+                raise ValueError(
+                    f"task {spawn_tid} forked more than one parallel region; "
+                    "record-and-replay supports one region per task")
+            placements[spawn_tid] = GangPlacement(
+                spawn_tid, gang_id, [-1] * n_threads)
+        for w, entries in enumerate(self._rec_entries):
+            for e in entries:
+                if isinstance(e, tuple) and e[0] in placements:
+                    placements[e[0]].workers[e[1]] = w
+        steals = [(w, victim, e)
+                  for w, lst in enumerate(self._rec_steals)
+                  for victim, e in lst]
+        return Recording(
+            digest=graph_key(graph).digest,
+            graph_name=graph.name,
+            n_workers=self.n_workers,
+            policy=self.policy_name,
+            worker_orders=[list(e) for e in self._rec_entries],
+            gang_placements=placements,
+            gang_issue_order=[f[0] for f in self._rec_forks],
+            steals=steals,
+            collective_order=list(self._rec_comms),
+            source="dynamic",
+        )

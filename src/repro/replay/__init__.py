@@ -22,12 +22,15 @@ idea):
 * :class:`ReplayExecutor` — re-executes the graph from the recording with
   preallocated per-worker run lists, per-task dependency counters under
   per-task locks, and recorded gang placements: no victim selection, no
-  ``GET_WORKERS`` scan, near-zero fork-lock work;
-* :class:`ReplayPool` — persistent executors keyed on ``(GraphKey,
-  n_workers, policy)`` for steady-state serving loops, with adaptive
-  re-recording on sustained drift and worker-count remapping
-  (:func:`remap_recording`) of recordings shipped at a different worker
-  count.
+  ``GET_WORKERS`` scan, near-zero fork-lock work.  A facade over the
+  unified executor core (:mod:`repro.exec`) — pass ``core=`` to lease warm
+  workers shared with other executors;
+* :class:`ReplayPool` — persistent per-``(GraphKey, n_workers, policy)``
+  leases over one shared worker core per worker count, for steady-state
+  serving loops: adaptive re-recording on sustained plan deviation or
+  wall-clock regression (``latency_drift_factor``), LRU shape eviction
+  (``max_shapes``), and worker-count remapping (:func:`remap_recording`)
+  of recordings shipped at a different worker count.
 
 The record/replay contract
 --------------------------

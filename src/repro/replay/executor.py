@@ -1,117 +1,40 @@
 """Low-contention replay of a recorded task-graph execution.
 
-The dynamic runtime pays, per task: a queue push + pop under per-worker
-locks, a global indegree-lock critical section, victim selection, and — for
-gang regions — a fork-lock critical section running worker reservation.
-:class:`ReplayExecutor` re-executes a graph of identical structure from a
-:class:`~repro.replay.recording.Recording` with none of those decisions:
+Since the unified-executor refactor this module is a thin facade: the
+scheduling logic (preallocated run lists, atomic claims and dep counters,
+recorded gang placements with monotonic issue order, run-ahead,
+stall-triggered dynamic fallback) lives in
+:class:`~repro.exec.replay.ReplayDispatch`, and the worker substrate
+(persistent threads, park/wake, deadlock detection) is the shared
+:class:`~repro.exec.core.ExecutorCore` — the same substrate the dynamic
+:class:`~repro.core.runtime.Runtime` runs on.
 
-* each worker walks its **preallocated run list** (the recorded start order),
-* readiness is tracked by **per-task dependency counters** built on
-  CPython-atomic ``list.append``/``len`` (no locks at all on the task hot
-  path; task claims are atomic ``dict.setdefault`` races, first wins),
-* results live in a preallocated list (index = tid; GIL-atomic writes),
-* gang regions are forked straight onto their **recorded placement** in the
-  recorded gang-id order — no ``GET_WORKERS`` scan, and the fork lock is
-  held only to bump the issue cursor.
-
-Deviation handling (cost drift / stale recordings): a worker whose next
-recorded entry is not ready within ``stall_timeout`` falls back to *dynamic
-stealing* — it scans for any ready-but-unclaimed task (or a published gang
-ULT) and executes that instead, then re-checks its list.  Claims are
-per-task, so a stolen task's recorded owner simply skips it.  Fallback never
-steals a region-forking task whose recorded spawner is someone else: forks
-must come from a worker free to join, preserving the gang invariants
-(distinct workers per blocking region, monotonic issue order).
-
-Deadlock freedom: run lists are recorded start orders, so dependency and
-list-predecessor edges embed in one global time order (acyclic); the
-earliest unfinished entry is always runnable by its owner, and the fallback
-only adds work, never removes readiness.
+One executor owns (or leases) a worker pool sized to the recording; call
+:meth:`ReplayExecutor.run` once per graph instance (same structure, e.g.
+each iteration of a factorization sweep).  With ``core=`` the executor
+leases warm workers from a shared core (the serving pool keeps one core
+per worker count and any number of per-shape executors on top of it);
+without, it owns a private core.
 """
 
 from __future__ import annotations
 
-import threading
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional
 
-from ..core.simulator import DeadlockError
-from ..core.taskgraph import Task, TaskContext, TaskGraph
-from .recording import GangPlacement, Recording
+from ..exec.core import ExecutorCore
+from ..exec.replay import ReplayDispatch, ReplayError
+from ..core.taskgraph import TaskGraph
+from .recording import Recording
 
-
-class ReplayError(RuntimeError):
-    """The recording cannot drive this graph (e.g. an unplaced gang region)."""
-
-
-class _ReplayRegion:
-    """A forked parallel region during replay (blocking in-region barrier)."""
-
-    def __init__(self, spawn_tid: int, gang_id: int, n_threads: int,
-                 executor: "ReplayExecutor"):
-        self.spawn_tid = spawn_tid
-        self.gang_id = gang_id
-        self.n_threads = n_threads
-        self.executor = executor
-        self.body: Optional[Callable[[int, "_ReplayRegion"], Any]] = None
-        self.lock = threading.Lock()
-        self.cv = threading.Condition(self.lock)
-        self.barrier_round = 0
-        self.arrived = 0
-        self.done = 0
-        self.started = [False] * n_threads
-        self.results: List[Any] = [None] * n_threads
-
-    def barrier(self) -> None:
-        ex = self.executor
-        with self.cv:
-            my_round = self.barrier_round
-            self.arrived += 1
-            if self.arrived == self.n_threads:
-                self.arrived = 0
-                self.barrier_round += 1
-                self.cv.notify_all()
-                return
-            while self.barrier_round == my_round:
-                if ex._aborted():
-                    raise DeadlockError(ex._abort_reason())
-                self.cv.wait(timeout=ex.block_poll)
-
-    def claim(self, thread_num: int) -> bool:
-        with self.lock:
-            if self.started[thread_num]:
-                return False
-            self.started[thread_num] = True
-            return True
-
-    def claim_any(self) -> Optional[int]:
-        with self.lock:
-            for i, s in enumerate(self.started):
-                if not s:
-                    self.started[i] = True
-                    return i
-            return None
-
-    def thread_done(self, thread_num: int, result: Any) -> None:
-        with self.cv:
-            self.results[thread_num] = result
-            self.done += 1
-            if self.done == self.n_threads:
-                self.cv.notify_all()
-
-    @property
-    def finished(self) -> bool:
-        return self.done == self.n_threads
+__all__ = ["ReplayError", "ReplayExecutor", "replay_graph"]
 
 
 class ReplayExecutor:
     """Re-execute task graphs from a :class:`Recording`.
 
-    One executor owns a persistent worker pool sized to the recording; call
-    :meth:`run` once per graph instance (same structure, e.g. each iteration
-    of a factorization sweep).  Use as a context manager or call
-    :meth:`shutdown`.
+    Use as a context manager or call :meth:`shutdown`.  ``shutdown`` on an
+    executor leasing a shared ``core`` releases the lease but leaves the
+    core's threads warm for other lessees.
     """
 
     def __init__(
@@ -121,83 +44,35 @@ class ReplayExecutor:
         stall_timeout: float = 1e-3,
         block_poll: float = 0.05,
         check_digest: bool = True,
+        core: Optional[ExecutorCore] = None,
     ):
+        if core is not None and core.n_workers != recording.n_workers:
+            raise ValueError(
+                f"shared core has {core.n_workers} workers but the recording "
+                f"was made at {recording.n_workers}")
         self.recording = recording
         self.n_workers = recording.n_workers
         self.stall_timeout = stall_timeout
         self.block_poll = block_poll
         self.check_digest = check_digest
 
-        n = self.n_workers
-        self._orders = [list(o) for o in recording.worker_orders]
-        self._placements: Dict[int, GangPlacement] = dict(recording.gang_placements)
-        self._issue_order: List[int] = list(recording.gang_issue_order)
-        self._issue_set = set(self._issue_order)
-        # spawn_tid -> recorded owner worker of every entry, for wakeups
-        self._owner: Dict[int, int] = recording.owner_of()
-
-        # per-run preallocated state (reset in _reset)
-        self._graph: Optional[TaskGraph] = None
-        self._n_tasks = 0
-        self._indeg: List[int] = []
-        self._ready: List[bool] = []
-        self._claims: Dict[int, int] = {}
-        self._done: List[bool] = []
-        self._dep_seen: List[list] = []
-        self._completed: list = []
-        self._results: List[Any] = []
-        self._regions: Dict[int, _ReplayRegion] = {}
-        self._issue_cursor = 0
-
-        self._worker_cvs = [threading.Condition() for _ in range(n)]
-        self._waiting = [False] * n          # worker w is parked on its cv
-        self._fork_lock = threading.Lock()
-        self._fork_cv = threading.Condition(self._fork_lock)
-        self._done_lock = threading.Lock()
-        self._done_cv = threading.Condition(self._done_lock)
-
-        self._failure: Optional[BaseException] = None
-        self._shutdown = False
-        self._generation = 0
-        self._gen_cv = threading.Condition()
-        self._workers_idle = n
-
-        self.stats: Dict[str, int] = {}
-        self.issued_gang_ids: List[int] = []
-
-        self._tls = threading.local()
-        self._threads: List[threading.Thread] = []
-        self._started = False
+        self._core = core if core is not None else ExecutorCore(
+            recording.n_workers, block_poll=block_poll, name="replay-worker")
+        self._owns_core = core is None
+        self._dispatch = ReplayDispatch(recording, stall_timeout=stall_timeout)
 
     # ------------------------------------------------------------------
     # lifecycle
+    @property
+    def core(self) -> ExecutorCore:
+        return self._core
+
     def start(self) -> None:
-        if self._started:
-            return
-        self._started = True
-        self._shutdown = False
-        for w in range(self.n_workers):
-            th = threading.Thread(target=self._worker_main, args=(w,),
-                                  daemon=True, name=f"replay-worker-{w}")
-            self._threads.append(th)
-            th.start()
+        self._core.start()
 
     def shutdown(self) -> None:
-        self._shutdown = True
-        with self._gen_cv:
-            self._gen_cv.notify_all()
-        for cv in self._worker_cvs:
-            with cv:
-                cv.notify_all()
-        for th in self._threads:
-            th.join(timeout=5.0)
-        alive = any(th.is_alive() for th in self._threads)
-        self._threads.clear()
-        self._started = False
-        if not alive:
-            # a straggler stuck in a long task body must keep seeing the
-            # shutdown flag so it exits instead of rejoining the pool
-            self._shutdown = False
+        if self._owns_core:
+            self._core.shutdown()
 
     def __enter__(self) -> "ReplayExecutor":
         self.start()
@@ -207,389 +82,20 @@ class ReplayExecutor:
         self.shutdown()
 
     # ------------------------------------------------------------------
-    def _reset(self, graph: TaskGraph) -> None:
-        n = len(graph)
-        self._graph = graph
-        self._n_tasks = n
-        # Lock-free bookkeeping, built on CPython-atomic container ops:
-        # * claim      = dict.setdefault(tid, w) — first setter wins;
-        # * dep count  = list.append + len vs indegree (append is atomic;
-        #                over-observing "ready" is idempotent);
-        # * completion = append to a global list, drained when len == n.
-        self._indeg = graph.indegrees()
-        self._ready = [c == 0 for c in self._indeg]
-        self._claims: Dict[int, int] = {}
-        self._done = [False] * n
-        self._dep_seen: List[list] = [[] for _ in range(n)]
-        self._completed: list = []
-        self._results = [None] * n
-        self._regions = {}
-        self._issue_cursor = 0
-        self._failure = None
-        self.stats = {"fallback_steals": 0, "stalls": 0, "skips": 0,
-                      "run_ahead": 0}
-        self.issued_gang_ids = []
+    # introspection (deviation stats drive the pool's adaptive re-recording)
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self._dispatch.stats
 
     @property
-    def _drained(self) -> bool:
-        return len(self._completed) >= self._n_tasks
+    def issued_gang_ids(self):
+        return self._dispatch.issued_gang_ids
 
+    # ------------------------------------------------------------------
     def run(self, graph: TaskGraph, timeout: float = 300.0) -> Dict[int, Any]:
         """Execute ``graph`` following the recording; returns {tid: result}."""
         self.recording.validate_against(graph, check_digest=self.check_digest)
-        if not self._started:
-            self.start()
-        # wait for the pool to be fully idle (previous run drained)
-        with self._gen_cv:
-            while self._workers_idle < self.n_workers:
-                self._gen_cv.wait(timeout=0.05)
-            self._reset(graph)
-            self._workers_idle = 0
-            self._generation += 1
-            self._gen_cv.notify_all()
-
-        deadline = time.monotonic() + timeout
-        with self._done_cv:
-            while not self._drained:
-                if self._failure is not None:
-                    break
-                if not self._done_cv.wait(timeout=0.05):
-                    if time.monotonic() > deadline:
-                        left = self._n_tasks - len(self._completed)
-                        self._failure = TimeoutError(
-                            f"replay of {graph.name!r} did not finish within "
-                            f"{timeout}s ({left} tasks left)")
-                        break
-        if self._failure is not None:
-            failure = self._failure
-            self._wake_all()
-            raise failure
-        return {t.tid: self._results[t.tid] for t in graph.tasks}
-
-    # ------------------------------------------------------------------
-    # abort plumbing
-    def _aborted(self) -> bool:
-        return self._shutdown or self._failure is not None
-
-    def _abort_reason(self) -> str:
-        return "executor shut down" if self._shutdown else f"replay aborted: {self._failure!r}"
-
-    def _fail(self, exc: BaseException) -> None:
-        if self._failure is None:
-            self._failure = exc
-        self._wake_all()
-
-    def _wake_all(self) -> None:
-        for cv in self._worker_cvs:
-            with cv:
-                cv.notify_all()
-        with self._done_cv:
-            self._done_cv.notify_all()
-        with self._fork_cv:
-            self._fork_cv.notify_all()
-        for region in list(self._regions.values()):
-            with region.cv:
-                region.cv.notify_all()
-
-    # ------------------------------------------------------------------
-    # worker loop
-    def _worker_main(self, w: int) -> None:
-        self._tls.wid = w
-        my_gen = 0
-        while True:
-            with self._gen_cv:
-                while self._generation == my_gen and not self._shutdown:
-                    self._gen_cv.wait(timeout=0.5)
-                if self._shutdown:
-                    return
-                my_gen = self._generation
-            try:
-                self._run_list(w)
-            except BaseException as e:  # noqa: BLE001 - propagate to run()
-                self._fail(e)
-            with self._gen_cv:
-                self._workers_idle += 1
-                self._gen_cv.notify_all()
-
-    def _run_list(self, w: int) -> None:
-        order = self._orders[w]
-        cv = self._worker_cvs[w]
-        idx = 0
-        stalled = False
-        while idx < len(order):
-            if self._aborted():
-                return
-            entry = order[idx]
-            if isinstance(entry, int):
-                advanced = self._try_task(w, entry)
-            else:
-                advanced = self._try_gang(w, entry)
-            if advanced:
-                idx += 1
-                stalled = False
-                continue
-            # next recorded entry not ready: stay work-conserving without
-            # parking — run a later ready entry of our *own* list (claims
-            # and counters gate correctness; the list order is a schedule
-            # hint, not a constraint)
-            if self._run_ahead(w, order, idx + 1):
-                continue
-            # nothing of ours is ready: wait one stall window, then start
-            # stealing dynamically (cost drift / stale recording)
-            if stalled:
-                self.stats["stalls"] += 1
-                if self._fallback_once(w):
-                    continue
-            # Dekker-style handoff with completers: set the waiting flag,
-            # THEN re-check readiness.  A completer sets ready, THEN reads
-            # the flag — under the GIL one of the two always observes the
-            # other, so no wakeup is ever missed.
-            self._waiting[w] = True
-            try:
-                with cv:
-                    if not self._entry_ready(entry):
-                        cv.wait(timeout=self.stall_timeout)
-            finally:
-                self._waiting[w] = False
-            stalled = True
-        # list exhausted: keep serving stalled regions/tasks until the run
-        # drains (a stale recording may leave work only this worker can
-        # help).  Wait a stall window *before* each scan so recorded owners
-        # keep priority over idle helpers on the hot path.
-        while not self._drained and not self._aborted():
-            with cv:
-                if self._drained:
-                    break
-                self._waiting[w] = True
-                cv.wait(timeout=self.stall_timeout)
-                self._waiting[w] = False
-            if not self._drained and not self._aborted():
-                self._fallback_once(w)
-
-    _RUN_AHEAD_WINDOW = 32
-
-    def _run_ahead(self, w: int, order, start: int) -> bool:
-        """Execute one ready-but-unclaimed later entry of our own run list
-        (bounded scan).  Region-forking tasks are skipped: forks must issue
-        in recorded order, and issuing one early from here could wait on a
-        fork that sits behind us in this very list."""
-        end = min(len(order), start + self._RUN_AHEAD_WINDOW)
-        for j in range(start, end):
-            e = order[j]
-            if not isinstance(e, int):
-                continue
-            if (self._ready[e] and e not in self._claims
-                    and e not in self._placements):
-                if self._claims.setdefault(e, w) != w:
-                    continue
-                self._execute(w, self._graph.tasks[e])
-                self.stats["run_ahead"] += 1
-                return True
-        return False
-
-    def _entry_ready(self, entry) -> bool:
-        """Cheap re-check under the worker cv (pairs with notify ordering:
-        state is written before the cv is taken, so no wakeup is missed)."""
-        if isinstance(entry, int):
-            return self._ready[entry] or entry in self._claims
-        return entry[0] in self._regions or self._done[entry[0]]
-
-    def _try_task(self, w: int, tid: int) -> bool:
-        """Attempt the next recorded task.  True => advance the list."""
-        if tid in self._claims:
-            # executed (or in flight) elsewhere — a fallback thief claimed
-            # it; safe to move on, whoever claimed it completes it
-            if not self._done[tid]:
-                self.stats["skips"] += 1
-            return True
-        if not self._ready[tid]:
-            return False
-        if self._claims.setdefault(tid, w) != w:
-            return True
-        self._execute(w, self._graph.tasks[tid])
-        return True
-
-    def _try_gang(self, w: int, entry: Tuple[int, int]) -> bool:
-        spawn_tid, thread_num = entry
-        region = self._regions.get(spawn_tid)
-        if region is None:
-            if self._done[spawn_tid]:
-                # region already fully joined (e.g. spawner ran ULTs inline
-                # after a fallback thief raced us) — nothing left to do
-                return True
-            return False
-        if not region.claim(thread_num):
-            return True
-        self._run_ult(w, region, thread_num)
-        return True
-
-    def _fallback_once(self, w: int) -> bool:
-        """Dynamic fallback: serve one gang ULT of a published region (they
-        gate everyone behind a blocking barrier) or one ready-but-unclaimed
-        task.  Never steals a region-forking task recorded for another
-        worker.  Returns True if work was executed."""
-        for region in list(self._regions.values()):
-            if region.finished:
-                continue
-            i = region.claim_any()
-            if i is not None:
-                self._run_ult(w, region, i)
-                self.stats["fallback_steals"] += 1
-                return True
-        for tid in range(self._n_tasks):
-            if self._ready[tid] and tid not in self._claims:
-                if tid in self._placements:
-                    if self._owner.get(tid, w) != w:
-                        continue
-                    # even our own forking task may only go when it is next
-                    # in recorded issue order — claiming it early would park
-                    # us on the fork cursor behind a fork only we can run
-                    cursor = self._issue_cursor
-                    if (tid in self._issue_set
-                            and (cursor >= len(self._issue_order)
-                                 or self._issue_order[cursor] != tid)):
-                        continue
-                if self._claims.setdefault(tid, w) != w:
-                    continue
-                self._execute(w, self._graph.tasks[tid])
-                self.stats["fallback_steals"] += 1
-                return True
-        return False
-
-    # ------------------------------------------------------------------
-    # execution
-    def _execute(self, w: int, task: Task) -> None:
-        ctx = TaskContext(self._graph, task, self._results, runtime=self)
-        ctx.worker_id = w  # type: ignore[attr-defined]
-        result = task.fn(ctx) if task.fn is not None else None
-        self._results[task.tid] = result
-        self._complete(w, task)
-
-    def _complete(self, w: int, task: Task) -> None:
-        self._done[task.tid] = True
-        dep_seen = self._dep_seen
-        indeg = self._indeg
-        for s in self._graph.successors(task):
-            stid = s.tid
-            lst = dep_seen[stid]
-            lst.append(None)                 # atomic; last appender sees full
-            if len(lst) < indeg[stid]:
-                continue
-            self._ready[stid] = True
-            owner = self._owner.get(stid, -1)
-            # wake the recorded owner only if it is parked: completers set
-            # ready THEN read the flag, waiters set the flag THEN re-check
-            # readiness — one side always observes the other (GIL order)
-            if 0 <= owner != w and self._waiting[owner]:
-                cv = self._worker_cvs[owner]
-                with cv:
-                    cv.notify()
-        self._completed.append(task.tid)     # atomic completion count
-        if self._drained:
-            with self._done_cv:
-                self._done_cv.notify_all()
-            # kick parked helpers out of their stall windows so the pool is
-            # immediately idle for the next run() of the sweep
-            for cv in self._worker_cvs:
-                with cv:
-                    cv.notify_all()
-
-    def _run_ult(self, w: int, region: _ReplayRegion, thread_num: int) -> None:
-        result = region.body(thread_num, region)
-        region.thread_done(thread_num, result)
-
-    # ------------------------------------------------------------------
-    # parallel regions (TaskContext.parallel delegates here)
-    def parallel(
-        self,
-        n_threads: int,
-        body: Callable[[int, _ReplayRegion], Any],
-        *,
-        gang: Optional[bool] = None,
-        spawn_ctx: Optional[TaskContext] = None,
-    ) -> List[Any]:
-        """Fork/join a region on its recorded placement.  The recorded fork
-        (gang-id) order is enforced: a fork waits until every earlier
-        recorded fork has been issued."""
-        del gang  # the recording already fixed the gang decision
-        spawn_recorded = (spawn_ctx is not None
-                          and spawn_ctx.task.tid in self._placements)
-        if n_threads == 1 and not spawn_recorded:
-            # unrecorded single-ULT region: no barrier partner needed, run
-            # inline (recorded ones go through the normal path so the fork
-            # still issues in recorded gang-id order)
-            region = _ReplayRegion(-1, -1, 1, self)
-            region.body = body
-            region.started[0] = True
-            self._run_ult(getattr(self._tls, "wid", 0), region, 0)
-            return list(region.results)
-        if spawn_ctx is None:
-            raise ReplayError("replayed regions need a spawning task context")
-        if n_threads > self.n_workers:
-            raise ReplayError(
-                f"region requests {n_threads} ULTs but the replay pool has "
-                f"{self.n_workers} workers; blocking barriers would deadlock")
-        spawn_tid = spawn_ctx.task.tid
-        w = getattr(self._tls, "wid", 0)
-
-        placement = self._placements.get(spawn_tid)
-        region = _ReplayRegion(
-            spawn_tid,
-            placement.gang_id if placement else -1,
-            n_threads, self)
-        region.body = body
-        if placement is not None and len(placement.workers) != n_threads:
-            raise ReplayError(
-                f"task {spawn_tid} forked {n_threads} ULTs but the recording "
-                f"placed {len(placement.workers)}")
-
-        # monotonic issue-order discipline: publish in recorded fork order
-        in_issue_order = spawn_tid in self._issue_set
-        with self._fork_cv:
-            while (in_issue_order
-                   and self._issue_cursor < len(self._issue_order)
-                   and self._issue_order[self._issue_cursor] != spawn_tid):
-                if self._aborted():
-                    raise DeadlockError(self._abort_reason())
-                self._fork_cv.wait(timeout=self.block_poll)
-            if in_issue_order and self._issue_cursor < len(self._issue_order):
-                self._issue_cursor += 1
-            if spawn_tid in self._regions:
-                raise ReplayError(
-                    f"task {spawn_tid} forked a second parallel region; "
-                    "recordings key regions by spawning task (one per task)")
-            self.issued_gang_ids.append(region.gang_id)
-            self._regions[spawn_tid] = region
-            self._fork_cv.notify_all()
-
-        # wake recorded members; unplaced regions (static seed) are served by
-        # whichever workers stall, so wake everyone
-        members = set(placement.workers) if placement is not None \
-            else set(range(self.n_workers))
-        for member in members:
-            if member != w:
-                cv = self._worker_cvs[member]
-                with cv:
-                    cv.notify_all()
-
-        # join: run own recorded ULTs inline (our run-list entries for this
-        # region sit *after* the spawning task — we are blocked here), then
-        # help via fallback until the region completes
-        if placement is not None:
-            for i, member in enumerate(placement.workers):
-                if member == w and region.claim(i):
-                    self._run_ult(w, region, i)
-        while not region.finished:
-            if self._aborted():
-                raise DeadlockError(self._abort_reason())
-            i = region.claim_any() if placement is None else None
-            if i is not None:
-                self._run_ult(w, region, i)
-                continue
-            with region.cv:
-                if not region.finished:
-                    region.cv.wait(timeout=self.block_poll)
-        return list(region.results)
+        return self._core.run(self._dispatch, graph, timeout=timeout)
 
 
 def replay_graph(

@@ -1,21 +1,22 @@
-"""Replay-serving pool: persistent executors with adaptive re-recording.
+"""Replay-serving pool: warm leased workers with adaptive re-recording.
 
 A steady-state serving loop (``examples/serve_lm.py``: one decode-step graph
 per request) re-executes the same graph *shape* indefinitely.  Running each
 request through :func:`~repro.core.runtime.run_graph` pays per-request
 runtime construction — thread spawn, queue allocation — on top of dynamic
-scheduling; even ``run_graph(cache=...)`` builds a fresh
-:class:`~repro.replay.executor.ReplayExecutor` (and its worker threads) per
-call.  :class:`ReplayPool` keeps one long-lived executor per
-``(GraphKey digest, n_workers, policy)`` and serves repeated executions on
-warm threads:
+scheduling.  :class:`ReplayPool` keeps one warm
+:class:`~repro.exec.core.ExecutorCore` per **worker count** and, per
+``(GraphKey digest, n_workers, policy)``, a prepared replay dispatch
+(:class:`~repro.replay.executor.ReplayExecutor` leasing the shared core).
+Total threads are capped by the set of distinct worker counts — not by the
+number of shapes — and every path (warmup, recording, replay) runs on the
+same warm substrate:
 
-* **first requests** for a shape run dynamically: ``warmup_runs`` requests
-  unrecorded (so jit compiles / cold caches do not skew the recorded
-  placement), then one recording run — or the pool adopts a recording
-  already in the :class:`~repro.replay.cache.GraphCache` (e.g. shipped from
-  a profiling run) with no dynamic run at all — and parks a started
-  executor;
+* **first requests** for a shape run dynamically *on the shared core*:
+  ``warmup_runs`` requests unrecorded (so jit compiles / cold caches do not
+  skew the recorded placement), then one recording run — or the pool adopts
+  a recording already in the :class:`~repro.replay.cache.GraphCache` (e.g.
+  shipped from a profiling run) with no dynamic run at all;
 * **worker-count remapping** — when the cache holds the shape only at a
   different worker count, the pool re-keys it via
   :func:`~repro.replay.remap.remap_recording` instead of paying a fresh
@@ -32,22 +33,38 @@ warm threads:
   with instrumentation on — it is served normally, its recording is the
   fresh one) or, when a side-effect-free graph *builder* was registered via
   :meth:`register_builder`, in a **background thread** that records the
-  builder's twin graph while requests keep replaying the stale recording.
-  Either way the new recording is hot-swapped into the ``GraphCache``
-  (:meth:`GraphCache.swap`) and the entry's executor is rebuilt.
+  builder's twin graph on transient workers while requests keep replaying
+  the stale recording.  Either way the new recording is hot-swapped into
+  the ``GraphCache`` (:meth:`GraphCache.swap`) and the entry's executor is
+  rebuilt;
+* **latency-aware drift** — deviation-rate triggers miss recordings that
+  are *consistently imbalanced* (zero steals, long stalls baked into the
+  placement).  With ``latency_drift_factor`` set, the pool tracks an EWMA
+  of per-run replay wall clock against an EWMA of the entry's dynamic runs
+  (warmups, recordings, re-recordings); a replay EWMA above ``factor ×``
+  the dynamic baseline for ``drift_patience`` consecutive runs also
+  triggers re-recording — even at zero fallback steals;
+* **multi-tenant cap** — ``max_shapes`` bounds the number of resident
+  entries; inserting past the cap evicts the least-recently-used
+  ``(GraphKey, workers, policy)`` entry, releasing its core lease (cheap:
+  no threads die — the shared cores stay warm).  A request racing its own
+  entry's eviction completes normally on a fresh lease.
 
-Thread safety: requests for *different* shapes run concurrently on their
-own executors; requests for the same shape serialize on the entry lock (one
-executor replays one graph at a time by construction).
+Thread safety: requests for the same shape serialize on the entry lock;
+requests for different shapes at the same worker count serialize on the
+shared core (one run at a time per core); different worker counts run
+concurrently on their own cores.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from ..core.taskgraph import TaskGraph
+from ..exec.core import ExecutorCore
 from .cache import GraphCache, cache_key
 from .executor import ReplayExecutor
 from .graph_key import GraphKey, graph_key
@@ -65,15 +82,18 @@ class PoolEntryStats:
     records: int = 0          # cold dynamic recording runs
     remaps: int = 0           # recordings adopted via worker-count remap
     rerecords: int = 0        # adaptive re-recording swaps
-    drift: float = 0.0        # last observed drift rate
+    drift: float = 0.0        # last observed plan-deviation rate
     drift_strikes: int = 0    # consecutive runs past the threshold
+    replay_ms: float = 0.0    # EWMA of replay wall clock
+    dynamic_ms: float = 0.0   # EWMA of dynamic-run wall clock (baseline)
+    latency_strikes: int = 0  # consecutive replays past the latency factor
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
 
 class _PoolEntry:
-    """One persistent executor + its recording + drift bookkeeping."""
+    """One per-shape lease (executor + recording) + drift bookkeeping."""
 
     __slots__ = ("executor", "recording", "n_entries", "lock", "stats",
                  "needs_rerecord", "rerecord_inflight", "last_error")
@@ -102,6 +122,13 @@ class ReplayPool:
         A replay whose ``(fallback steals + skips) / entries`` rate exceeds
         ``drift_threshold`` counts one strike; ``drift_patience`` strikes in
         a row trigger re-recording.
+    latency_drift_factor:
+        When set, a replay wall-clock EWMA above ``factor ×`` the entry's
+        dynamic-baseline EWMA counts a latency strike; ``drift_patience``
+        strikes in a row trigger re-recording even at zero plan deviation.
+        ``None`` (default) disables the latency trigger.
+    latency_alpha:
+        EWMA smoothing for the wall-clock trackers.
     allow_remap:
         On a cache miss for the exact worker count, remap the nearest
         recorded worker count instead of recording from scratch.
@@ -112,6 +139,10 @@ class ReplayPool:
         would bake a skewed task placement into the recording; recording a
         warm run captures the steady-state schedule.  Adopted/remapped
         recordings skip warmup entirely.
+    max_shapes:
+        Cap on resident ``(GraphKey, workers, policy)`` entries; the
+        least-recently-used entry past the cap is evicted and its core
+        lease released.  ``None`` (default) keeps every shape.
     stall_timeout:
         Forwarded to each :class:`ReplayExecutor`.
     """
@@ -122,19 +153,29 @@ class ReplayPool:
         *,
         drift_threshold: float = 0.25,
         drift_patience: int = 3,
+        latency_drift_factor: Optional[float] = None,
+        latency_alpha: float = 0.3,
         allow_remap: bool = True,
         warmup_runs: int = 1,
+        max_shapes: Optional[int] = None,
         stall_timeout: float = 1e-3,
     ):
+        if max_shapes is not None and max_shapes < 1:
+            raise ValueError("max_shapes must be >= 1 (or None for no cap)")
         self.cache = cache if cache is not None else GraphCache()
         self.drift_threshold = drift_threshold
         self.drift_patience = drift_patience
+        self.latency_drift_factor = latency_drift_factor
+        self.latency_alpha = latency_alpha
         self.allow_remap = allow_remap
         self.warmup_runs = warmup_runs
+        self.max_shapes = max_shapes
         self.stall_timeout = stall_timeout
         self.last_recording: Optional[Recording] = None
+        self.evictions = 0
 
-        self._entries: Dict[str, _PoolEntry] = {}
+        self._entries: Dict[str, _PoolEntry] = {}   # insertion order = LRU
+        self._cores: Dict[int, ExecutorCore] = {}   # one per worker count
         self._builders: Dict[str, Callable[[], TaskGraph]] = {}
         self._lock = threading.Lock()
         self._closed = False
@@ -142,19 +183,29 @@ class ReplayPool:
     # ------------------------------------------------------------------
     # lifecycle
     def shutdown(self) -> None:
-        """Stop every executor.  Terminal: later :meth:`run` calls raise
-        (a request racing shutdown either completes first — shutdown waits
-        on its entry lock — or observes the closed flag before it can
-        install an executor nobody could ever stop)."""
+        """Release every lease and stop the shared cores.  Terminal: later
+        :meth:`run` calls raise (a request racing shutdown either completes
+        first — shutdown waits on its entry lock — or observes the closed
+        flag before it can install an executor nobody could ever stop)."""
         with self._lock:
             self._closed = True
             entries = list(self._entries.values())
             self._entries.clear()
+            cores = list(self._cores.values())
+            self._cores.clear()
         for entry in entries:
-            with entry.lock:
-                if entry.executor is not None:
-                    entry.executor.shutdown()
-                    entry.executor = None
+            self._release_entry(entry)
+        for core in cores:
+            core.shutdown()
+
+    def _release_entry(self, entry: _PoolEntry) -> None:
+        """Shut an evicted/closed entry's lease down cleanly: waits for any
+        in-flight request (the entry lock) before dropping the executor."""
+        with entry.lock:
+            if entry.executor is not None:
+                entry.executor.shutdown()
+                entry.executor = None
+            entry.needs_rerecord = False
 
     def __enter__(self) -> "ReplayPool":
         return self
@@ -165,6 +216,22 @@ class ReplayPool:
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
+
+    # ------------------------------------------------------------------
+    # shared worker substrate
+    def _core_for(self, n_workers: int) -> ExecutorCore:
+        """The pool-wide warm core for this worker count (started lazily).
+        Every shape at this count — and its warmup/recording dynamic runs —
+        leases these same threads."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ReplayPool is shut down")
+            core = self._cores.get(n_workers)
+            if core is None:
+                core = self._cores[n_workers] = ExecutorCore(
+                    n_workers, name=f"pool{n_workers}-worker")
+                core.start()
+            return core
 
     # ------------------------------------------------------------------
     # introspection
@@ -209,7 +276,7 @@ class ReplayPool:
     ) -> Dict[int, Any]:
         """Serve one execution of ``graph``; returns ``{tid: result}``.
 
-        ``gang_default`` / ``seed`` configure the dynamic runtime used for
+        ``gang_default`` / ``seed`` configure the dynamic dispatch used for
         warmup, recording, and re-recording runs (replays are driven purely
         by the recording).  They are not part of the entry key: one shape
         should be served under one scheduling configuration.
@@ -221,13 +288,22 @@ class ReplayPool:
         if key is None:
             key = graph_key(graph)
         ckey = cache_key(key, n_workers, policy)
+        evicted: List[_PoolEntry] = []
         with self._lock:
             if self._closed:
                 raise RuntimeError("ReplayPool is shut down")
-            entry = self._entries.get(ckey)
+            entry = self._entries.pop(ckey, None)
             if entry is None:
-                entry = self._entries[ckey] = _PoolEntry()
+                entry = _PoolEntry()
+            self._entries[ckey] = entry          # (re)insert: most recent
+            if self.max_shapes is not None:
+                while len(self._entries) > self.max_shapes:
+                    oldest = next(iter(self._entries))
+                    evicted.append(self._entries.pop(oldest))
+                    self.evictions += 1
             builder = self._builders.get(key.digest)
+        for old in evicted:
+            self._release_entry(old)
 
         rt_kwargs = {"policy": policy, "gang_default": gang_default,
                      "seed": seed}
@@ -254,11 +330,18 @@ class ReplayPool:
                         daemon=True,
                         name=f"replay-pool-rerecord-{ckey[:12]}",
                     ).start()
-            results = entry.executor.run(graph, timeout=timeout)
-            entry.stats.replays += 1
-            self._observe_drift(entry)
+            results = self._replay(entry, graph, timeout)
             self.last_recording = entry.recording
             return results
+
+    def _replay(self, entry: _PoolEntry, graph: TaskGraph,
+                timeout: float) -> Dict[int, Any]:
+        t0 = time.perf_counter()
+        results = entry.executor.run(graph, timeout=timeout)
+        elapsed = time.perf_counter() - t0
+        entry.stats.replays += 1
+        self._observe_drift(entry, elapsed)
+        return results
 
     # ------------------------------------------------------------------
     # entry construction paths
@@ -271,30 +354,38 @@ class ReplayPool:
         rt_kwargs: Dict[str, Any],
         timeout: float,
     ) -> Dict[int, Any]:
-        """Cold path: adopt / remap / record, park the executor, serve."""
+        """Cold path: adopt / remap / record, install the lease, serve."""
         policy = rt_kwargs["policy"]
         rec = self.cache.lookup(key, n_workers, policy)
         if rec is None and self.allow_remap:
             rec = self._remap_from_cache(entry, key, n_workers, policy)
         if rec is not None:
             self._install(entry, rec)
-            results = entry.executor.run(graph, timeout=timeout)
-            entry.stats.replays += 1
-            self._observe_drift(entry)
-            return results
+            if (self.latency_drift_factor is not None
+                    and entry.stats.dynamic_ms == 0.0):
+                # adopted/remapped recordings arrive with no dynamic runs:
+                # without a baseline the latency trigger could never fire —
+                # precisely for the shipped recordings most likely to be
+                # imbalanced.  One dynamic probe seeds the EWMA.
+                entry.stats.warmups += 1
+                results, _, elapsed = self._run_dynamic(
+                    graph, n_workers, rt_kwargs, timeout, record=False)
+                self._note_dynamic(entry, elapsed)
+                return results
+            return self._replay(entry, graph, timeout)
         if entry.stats.warmups < self.warmup_runs:
             # serve cold requests dynamically without recording: the first
             # executions pay one-off costs (jit compiles) whose skew would
             # otherwise be baked into the recorded placement
             entry.stats.warmups += 1
-            from ..core.runtime import Runtime
-
-            rt = Runtime(n_workers, **rt_kwargs)
-            with rt:
-                return rt.run(graph, timeout=timeout)
-        results, recording = self._record_dynamic(graph, n_workers, rt_kwargs,
-                                                  timeout)
+            results, _, elapsed = self._run_dynamic(
+                graph, n_workers, rt_kwargs, timeout, record=False)
+            self._note_dynamic(entry, elapsed)
+            return results
+        results, recording, elapsed = self._run_dynamic(
+            graph, n_workers, rt_kwargs, timeout, record=True)
         entry.stats.records += 1
+        self._note_dynamic(entry, elapsed)
         self.cache.store(recording)
         self._install(entry, recording)
         return results
@@ -319,45 +410,75 @@ class ReplayPool:
             return rec
         return None
 
-    def _record_dynamic(
+    def _run_dynamic(
         self,
         graph: TaskGraph,
         n_workers: int,
         rt_kwargs: Dict[str, Any],
         timeout: float,
-    ) -> Tuple[Dict[int, Any], Recording]:
+        *,
+        record: bool,
+        transient: bool = False,
+    ) -> Tuple[Dict[int, Any], Optional[Recording], float]:
+        """One dynamic run on the shared warm core (or on transient private
+        threads when ``transient`` — the background re-record path, which
+        must not occupy the serving core)."""
         from ..core.runtime import Runtime
 
-        rt = Runtime(n_workers, **rt_kwargs)
+        core = None if transient else self._core_for(n_workers)
+        rt = Runtime(n_workers, core=core, **rt_kwargs)
         with rt:
-            results = rt.run(graph, timeout=timeout, record=True)
-        return results, rt.last_recording
+            t0 = time.perf_counter()
+            results = rt.run(graph, timeout=timeout, record=record)
+            elapsed = time.perf_counter() - t0
+        return results, rt.last_recording, elapsed
 
     def _install(self, entry: _PoolEntry, recording: Recording) -> None:
-        """(Re)build the entry's persistent executor around ``recording``."""
+        """(Re)build the entry's executor lease around ``recording``."""
         if entry.executor is not None:
             entry.executor.shutdown()
         entry.recording = recording
         entry.n_entries = max(
             1, sum(len(o) for o in recording.worker_orders))
         entry.executor = ReplayExecutor(
-            recording, stall_timeout=self.stall_timeout, check_digest=False)
+            recording, stall_timeout=self.stall_timeout, check_digest=False,
+            core=self._core_for(recording.n_workers))
         entry.executor.start()
         entry.needs_rerecord = False
         entry.stats.drift_strikes = 0
+        entry.stats.latency_strikes = 0
 
     # ------------------------------------------------------------------
-    # adaptive re-recording
-    def _observe_drift(self, entry: _PoolEntry) -> None:
+    # adaptive re-recording (plan deviation + latency regression)
+    def _ewma(self, old: float, sample_ms: float) -> float:
+        if old <= 0.0:
+            return sample_ms
+        return old + self.latency_alpha * (sample_ms - old)
+
+    def _note_dynamic(self, entry: _PoolEntry, elapsed_s: float) -> None:
+        entry.stats.dynamic_ms = self._ewma(entry.stats.dynamic_ms,
+                                            elapsed_s * 1e3)
+
+    def _observe_drift(self, entry: _PoolEntry, elapsed_s: float) -> None:
         stats = entry.executor.stats
+        st = entry.stats
         drift = (stats.get("fallback_steals", 0)
                  + stats.get("skips", 0)) / entry.n_entries
-        entry.stats.drift = drift
+        st.drift = drift
         if drift > self.drift_threshold:
-            entry.stats.drift_strikes += 1
+            st.drift_strikes += 1
         else:
-            entry.stats.drift_strikes = 0
-        if entry.stats.drift_strikes >= self.drift_patience:
+            st.drift_strikes = 0
+        # latency-aware drift: a consistently imbalanced recording can
+        # replay deviation-free yet much slower than dynamic scheduling
+        st.replay_ms = self._ewma(st.replay_ms, elapsed_s * 1e3)
+        if (self.latency_drift_factor is not None and st.dynamic_ms > 0.0
+                and st.replay_ms > st.dynamic_ms * self.latency_drift_factor):
+            st.latency_strikes += 1
+        else:
+            st.latency_strikes = 0
+        if (st.drift_strikes >= self.drift_patience
+                or st.latency_strikes >= self.drift_patience):
             entry.needs_rerecord = True
 
     def _rerecord_inline(
@@ -371,9 +492,10 @@ class ReplayPool:
         """Serve this request dynamically with instrumentation on; its
         recording replaces the stale one (the request itself is the
         re-record — no double execution of side-effecting task bodies)."""
-        results, recording = self._record_dynamic(graph, n_workers, rt_kwargs,
-                                                  timeout)
+        results, recording, elapsed = self._run_dynamic(
+            graph, n_workers, rt_kwargs, timeout, record=True)
         entry.stats.rerecords += 1
+        self._note_dynamic(entry, elapsed)
         self.cache.swap(recording)
         self._install(entry, recording)
         return results
@@ -386,21 +508,24 @@ class ReplayPool:
         rt_kwargs: Dict[str, Any],
         timeout: float,
     ) -> None:
-        """Record the builder's twin graph off the request path, then
-        hot-swap recording + executor under the entry lock."""
+        """Record the builder's twin graph off the request path — on
+        transient threads, so the serving core stays free for replays —
+        then hot-swap recording + executor under the entry lock."""
         try:
             twin = builder()
-            _, recording = self._record_dynamic(twin, n_workers, rt_kwargs,
-                                                timeout)
+            _, recording, elapsed = self._run_dynamic(
+                twin, n_workers, rt_kwargs, timeout, record=True,
+                transient=True)
             with entry.lock:
                 with self._lock:
                     live = any(e is entry for e in self._entries.values())
                 if not live:
                     # the pool was shut down (or the entry evicted) while we
-                    # recorded: installing would leak an unreachable
-                    # executor's worker threads — drop the recording
+                    # recorded: installing would resurrect a lease nobody
+                    # can reach — drop the recording
                     return
                 entry.stats.rerecords += 1
+                self._note_dynamic(entry, elapsed)
                 self.cache.swap(recording)
                 self._install(entry, recording)
         except BaseException as e:  # noqa: BLE001 - surfaced via last_error

@@ -14,6 +14,14 @@ directly:
   list is *some* dependency-consistent start order degrades gracefully:
   cross-list inversions introduced by the fold are served by the executor's
   run-ahead window and dynamic fallback, never deadlock.
+* **expansion rebalancing** — expanding to *more* workers would leave the
+  extra workers with empty run lists (fallback-only helpers that idle
+  through stall windows before stealing).  Instead, each empty worker is
+  seeded with the tail half of the currently longest run list's plain-task
+  entries (gang entries stay pinned to their placement worker).  Relative
+  order within the moved tail and within the donor's remainder is
+  preserved, so both remain dependency-consistent start orders; per-task
+  claims keep the split correct regardless of how costs shift.
 * **gang co-placement** — a placement's workers are folded with the same
   rule, then repaired to stay *distinct* (blocking in-region barriers need
   every ULT on its own kernel thread): colliding threads are reassigned
@@ -84,6 +92,8 @@ def remap_recording(rec: Recording, new_workers: int) -> Recording:
             buckets[target].append((idx, ow, e))
     orders = [[e for _, _, e in sorted(b, key=lambda t: (t[0], t[1]))]
               for b in buckets]
+    if new_workers > old:
+        _seed_expansion_workers(orders)
 
     return Recording(
         digest=rec.digest,
@@ -97,6 +107,26 @@ def remap_recording(rec: Recording, new_workers: int) -> Recording:
         collective_order=list(rec.collective_order),
         source=f"remap[{old}->{new_workers}]:{rec.source}",
     )
+
+
+def _seed_expansion_workers(orders: List[List[Entry]]) -> None:
+    """Seed each empty run list with the tail half of the longest list's
+    plain-task entries (in place).  Gang entries never move — their worker
+    is fixed by the (already repaired) placement; a donor with fewer than
+    two movable entries leaves the target as a fallback-only helper."""
+    for w, order in enumerate(orders):
+        if order:
+            continue
+        donor = max(range(len(orders)),
+                    key=lambda i: sum(1 for e in orders[i] if isinstance(e, int)))
+        movable = [i for i, e in enumerate(orders[donor]) if isinstance(e, int)]
+        if len(movable) < 2:
+            continue
+        tail = movable[len(movable) // 2:]
+        tail_set = set(tail)
+        orders[w] = [orders[donor][i] for i in tail]
+        orders[donor] = [e for i, e in enumerate(orders[donor])
+                         if i not in tail_set]
 
 
 def nearest_worker_count(available: List[int], wanted: int) -> int:

@@ -1,0 +1,41 @@
+"""Suite-wide fixtures: worker-thread leak detection.
+
+Every executor in the repo (dynamic :class:`~repro.core.runtime.Runtime`,
+:class:`~repro.replay.ReplayExecutor`, the pool's shared cores) spawns
+worker threads with well-known name prefixes.  A test that forgets to shut
+a facade down — or an executor whose shutdown stops joining its threads —
+leaks them silently; this hook turns that into a loud CI failure.
+"""
+
+import threading
+import time
+
+import pytest
+
+# name prefixes of every thread the repo's executors spawn
+_WORKER_PREFIXES = (
+    "repro-worker",        # Runtime's private core
+    "replay-worker",       # ReplayExecutor's private core
+    "pool",                # ReplayPool shared cores (pool{N}-worker)
+    "exec-core",           # bare ExecutorCore default
+    "replay-pool-rerecord",  # background re-recording threads
+)
+
+
+def _leaked_worker_threads():
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith(_WORKER_PREFIXES)]
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _no_worker_thread_leaks():
+    """Assert every executor worker thread is gone when the suite ends."""
+    yield
+    deadline = time.monotonic() + 10.0
+    leaked = _leaked_worker_threads()
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.05)          # grace period for daemon teardown
+        leaked = _leaked_worker_threads()
+    assert not leaked, (
+        f"worker-thread leak: {len(leaked)} executor thread(s) still alive "
+        f"after the suite: {sorted(leaked)}")

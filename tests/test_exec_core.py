@@ -1,0 +1,340 @@
+"""Tests for the unified executor core (repro.exec).
+
+Covers the refactor contract: one worker substrate under dynamic, replay
+and pooled scheduling — Runtime reuses warm threads across runs, a dynamic
+and a replay dispatch share one core with identical results, the pool caps
+threads per worker count and evicts LRU shapes cleanly (including under
+request races), the centralized deadlock detector fires under nested
+``parallel()``, latency-aware drift re-records consistently imbalanced
+recordings, and worker-count expansion seeds the new workers with work.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DeadlockError, Runtime, TaskGraph, run_graph
+from repro.exec import ExecutorCore
+from repro.linalg import (
+    build_cholesky_graph,
+    cholesky_extract,
+    random_spd,
+    to_tiles,
+)
+from repro.replay import Recording, ReplayExecutor, ReplayPool, remap_recording, replay_graph
+
+NB, B = 6, 16
+
+
+def _arith_graph(n: int, name: str = "arith") -> TaskGraph:
+    g = TaskGraph(name)
+    xs = [g.add(lambda ctx, i=i: i * 3, name=f"x{i}") for i in range(n)]
+    s = g.add(lambda ctx: sum(ctx.dep_results()), deps=xs, name="sum")
+    g.add(lambda ctx: ctx[s] + 1, deps=[s], name="inc")
+    return g
+
+
+def _threads_named(prefix: str):
+    return sorted(t.ident for t in threading.enumerate()
+                  if t.name.startswith(prefix) and t.is_alive())
+
+
+# ---------------------------------------------------------------------------
+# warm thread reuse
+# ---------------------------------------------------------------------------
+def test_runtime_thread_reuse_across_runs():
+    """Repeated Runtime.run calls execute on the same parked workers — no
+    thread respawn between runs."""
+    with Runtime(3) as rt:
+        res = rt.run(_arith_graph(8))
+        assert res[8] == sum(i * 3 for i in range(8))
+        idents = _threads_named("repro-worker")
+        assert len(idents) == 3
+        for trial in range(4):
+            res = rt.run(_arith_graph(8, name=f"g{trial}"))
+            assert res[9] == res[8] + 1
+            assert _threads_named("repro-worker") == idents, \
+                "worker threads were respawned between runs"
+    assert _threads_named("repro-worker") == []
+
+
+def test_dynamic_and_replay_dispatch_share_one_core():
+    """A recording made by the dynamic dispatch replays on the *same* core
+    (same threads) with identical results — the refactor's core claim."""
+    with ExecutorCore(3) as core:
+        rt = Runtime(3, core=core)
+        res_dyn = rt.run(_arith_graph(12), record=True)
+        rec = rt.last_recording
+        idents = _threads_named("exec-core")
+        assert len(idents) == 3
+
+        ex = ReplayExecutor(rec, core=core)
+        res_rep = ex.run(_arith_graph(12))
+        assert res_rep == res_dyn
+        assert _threads_named("exec-core") == idents, \
+            "replay executor spawned its own threads despite the shared core"
+        # facade shutdown releases the lease but leaves the core warm
+        ex.shutdown()
+        rt.shutdown()
+        assert _threads_named("exec-core") == idents
+        assert rt.run(_arith_graph(12)) == res_dyn
+    assert _threads_named("exec-core") == []
+
+
+def test_shared_core_rejects_mismatched_worker_count():
+    with ExecutorCore(2) as core:
+        with pytest.raises(ValueError, match="workers"):
+            Runtime(3, core=core)
+        rt = Runtime(2, core=core)
+        rec = None
+        rt.run(_arith_graph(4), record=True)
+        rec = rt.last_recording
+    with ExecutorCore(3) as other:
+        with pytest.raises(ValueError, match="workers"):
+            ReplayExecutor(rec, core=other)
+
+
+# ---------------------------------------------------------------------------
+# pool: shared cores + LRU eviction
+# ---------------------------------------------------------------------------
+def test_pool_shares_cores_across_shapes():
+    """N shapes at one worker count lease ONE thread set — the pool caps
+    threads by distinct worker counts, not by shapes."""
+    with ReplayPool(warmup_runs=0) as pool:
+        for n in (5, 7, 9):
+            for _ in range(2):
+                res = run_graph(_arith_graph(n), 2, pool=pool)
+                assert res[n] == sum(i * 3 for i in range(n))
+        run_graph(_arith_graph(5), 3, pool=pool)
+        assert len(pool) == 4                      # 3 shapes @2w + 1 @3w
+        assert len(_threads_named("pool2-worker")) == 2
+        assert len(_threads_named("pool3-worker")) == 3
+    assert _threads_named("pool") == []
+
+
+def test_pool_max_shapes_evicts_lru():
+    with ReplayPool(warmup_runs=0, max_shapes=2) as pool:
+        for n in (5, 7, 9):
+            run_graph(_arith_graph(n), 2, pool=pool)
+        assert len(pool) == 2 and pool.evictions == 1
+        # shape 5 was least recently used; 7 and 9 are resident
+        resident = set(pool.describe())
+        run_graph(_arith_graph(7), 2, pool=pool)   # hit: no new eviction
+        assert pool.evictions == 1
+        assert set(pool.describe()) == resident
+        # the evicted shape re-materializes as a fresh entry — eviction
+        # dropped its lease, not its cached recording, so it adopts the
+        # recording and replays instead of paying a new recording run
+        res = run_graph(_arith_graph(5), 2, pool=pool)
+        assert res[5] == sum(i * 3 for i in range(5))
+        assert pool.evictions == 2                 # 9 is now the LRU victim
+        stats = pool.describe()
+        assert any(st["requests"] == 1 and st["replays"] == 1
+                   and st["records"] == 0 for st in stats.values())
+
+
+def test_pool_eviction_race_with_requests():
+    """Concurrent requests across more shapes than max_shapes: every
+    request must be served correctly while entries churn through the LRU,
+    and all leases shut down cleanly."""
+    shapes = {n: sum(i * 3 for i in range(n)) for n in (4, 6, 8)}
+    errors = []
+
+    with ReplayPool(warmup_runs=0, max_shapes=1) as pool:
+        def hammer(seed):
+            try:
+                for round_ in range(6):
+                    for n, want in shapes.items():
+                        res = run_graph(_arith_graph(n), 2, pool=pool)
+                        assert res[n] == want, (seed, round_, n)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(s,)) for s in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        assert len(pool) == 1 and pool.evictions > 0
+        assert len(_threads_named("pool2-worker")) == 2
+    assert _threads_named("pool") == []
+
+
+# ---------------------------------------------------------------------------
+# deadlock detection under nested parallel()
+# ---------------------------------------------------------------------------
+def test_nested_nongang_blocking_region_deadlock_detected():
+    """A gang ULT forks a non-gang blocking region wider than the worker
+    pool: the ULTs multiplex, every worker ends up hard-blocked, and the
+    core's centralized detector must raise instead of hanging."""
+
+    def task(ctx):
+        def outer_body(tn, region):
+            if tn == 0:
+                return ctx.parallel(
+                    4, lambda i, r: (r.barrier(), i)[1], gang=False)
+            return tn
+
+        return ctx.parallel(2, outer_body, gang=True)
+
+    g = TaskGraph("nested-fig1")
+    g.add(task, name="spawn")
+    with pytest.raises((DeadlockError, TimeoutError)):
+        run_graph(g, 3, timeout=20.0)
+
+
+def test_failed_run_releases_gang_accounting_on_reuse():
+    """An aborted run can strand queued gang ULTs; starting the next run on
+    the same (warm) runtime must release their GangState accounting or
+    get_workers' load balancing skews forever."""
+
+    def spawner(ctx):
+        return ctx.parallel(2, lambda i, r: i, gang=True)
+
+    with Runtime(2) as rt:
+        g = TaskGraph("boom-with-gang")
+        g.add(spawner, name="gang")
+        g.add(lambda ctx: 1 / 0, name="boom")
+        with pytest.raises(ZeroDivisionError):
+            rt.run(g, timeout=30.0)
+        # a clean run on the same threads must find balanced accounting
+        ok = TaskGraph("after")
+        t = ok.add(spawner, name="gang2")
+        res = rt.run(ok, timeout=30.0)
+        assert sorted(res[t.tid]) == [0, 1]
+        # totals must balance (per-worker loads may carry the pre-existing
+        # steal skew: releases land on the executing worker, not the
+        # reserved one — harmless to get_workers' average-load filter)
+        assert rt.gang_state.n_gang_threads == 0
+
+
+def test_nested_gang_regions_complete():
+    """Nested gang regions (deeper nest level => stealable by outer-gang
+    members) complete with correct per-thread results on the unified core."""
+
+    def task(ctx):
+        def outer_body(tn, region):
+            region.barrier()
+            if tn == 0:
+                return ctx.parallel(2, lambda i, r: i * 10, gang=True)
+            return tn
+
+        return ctx.parallel(3, outer_body, gang=True)
+
+    g = TaskGraph("nested-gang")
+    t = g.add(task, name="spawn")
+    res = run_graph(g, 4, timeout=60.0)
+    assert res[t.tid][0] == [0, 10]
+    assert res[t.tid][1:] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# latency-aware drift
+# ---------------------------------------------------------------------------
+def test_pool_latency_drift_rerecords_imbalanced_recording():
+    """A shipped recording that serializes every task on one worker replays
+    with ZERO plan deviation (its owner runs its list faithfully) yet far
+    slower than dynamic scheduling.  The deviation-rate trigger is blind to
+    this; the latency EWMA trigger must re-record — including for *adopted*
+    recordings, whose dynamic baseline is seeded by a one-off probe run."""
+    from repro.replay import GraphCache
+
+    def mk():
+        g = TaskGraph("sleepy")
+        for i in range(8):
+            g.add(lambda ctx: time.sleep(0.004), name=f"s{i}")
+        return g
+
+    # record once, then squash: all eight sleeps serialized on worker 0
+    with Runtime(4) as rt:
+        rt.run(mk(), record=True)
+    rec = rt.last_recording
+    squashed = Recording.from_dict(rec.to_dict())
+    flat = [e for o in squashed.worker_orders for e in o]
+    squashed.worker_orders = [flat] + [[] for _ in range(rec.n_workers - 1)]
+    cache = GraphCache()
+    cache.store(squashed)
+
+    with ReplayPool(cache,
+                    drift_threshold=10.0,          # rate trigger disabled
+                    drift_patience=2,
+                    latency_drift_factor=1.5,
+                    stall_timeout=5.0) as pool:    # helpers never steal
+        run_graph(mk(), 4, pool=pool)              # adopt + baseline probe
+        (stats,) = pool.describe().values()
+        assert stats["warmups"] == 1 and stats["dynamic_ms"] > 0.0, stats
+
+        for _ in range(8):
+            run_graph(mk(), 4, pool=pool)
+            (stats,) = pool.describe().values()
+            if stats["rerecords"]:
+                break
+        (stats,) = pool.describe().values()
+        assert stats["rerecords"] >= 1, stats
+        # it was the latency trigger, not plan deviation, that fired
+        assert stats["drift_strikes"] == 0, stats
+        assert stats["replay_ms"] > stats["dynamic_ms"], stats
+
+
+# ---------------------------------------------------------------------------
+# expansion rebalancing
+# ---------------------------------------------------------------------------
+def _record_cholesky(workers=2, seed=11):
+    a = random_spd(NB * B, seed=seed)
+    st = to_tiles(a, B)
+    with Runtime(workers) as rt:
+        rt.run(build_cholesky_graph(NB, B, store=st), record=True)
+    return a, np.asarray(cholesky_extract(st)), rt.last_recording
+
+
+def test_remap_expansion_seeds_new_workers():
+    """Expanding a recording to more workers must seed the new workers with
+    split run lists (not leave them as fallback-only helpers), preserve
+    relative order within every split, and stay bit-identical on replay."""
+    a, l_dyn, rec = _record_cholesky(workers=2)
+    r4 = remap_recording(rec, 4)
+    assert all(r4.worker_orders[w] for w in range(4)), \
+        "expansion left a worker with an empty run list"
+    r4.validate_against(build_cholesky_graph(NB, B))
+
+    # every new list's tasks from one original worker keep their order
+    orig_pos = {}
+    for ow, order in enumerate(rec.worker_orders):
+        for i, e in enumerate(order):
+            if isinstance(e, int):
+                orig_pos[e] = (ow, i)
+    for order in r4.worker_orders:
+        by_owner = {}
+        for e in order:
+            if isinstance(e, int):
+                ow, i = orig_pos[e]
+                by_owner.setdefault(ow, []).append(i)
+        for ow, positions in by_owner.items():
+            assert positions == sorted(positions), \
+                f"expansion reordered old worker {ow}'s entries"
+
+    st = to_tiles(a, B)
+    replay_graph(build_cholesky_graph(NB, B, store=st), r4)
+    assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+
+
+def test_remap_expansion_via_pool_stays_identical():
+    """The pool's remap-adoption path serves an expanded recording with the
+    seeded run lists and matches the dynamic result."""
+    from repro.replay import GraphCache
+
+    a, l_dyn, rec = _record_cholesky(workers=2)
+    cache = GraphCache()
+    cache.store(rec)
+    with ReplayPool(cache) as pool:
+        st = to_tiles(a, B)
+        run_graph(build_cholesky_graph(NB, B, store=st), 4, pool=pool)
+        (stats,) = pool.describe().values()
+        assert stats["remaps"] == 1 and stats["records"] == 0
+        assert (np.asarray(cholesky_extract(st)) == l_dyn).all()
+    adopted = cache.lookup(rec.digest, 4, rec.policy)
+    assert adopted is not None
+    assert all(adopted.worker_orders[w] for w in range(4))
