@@ -8,7 +8,17 @@ release the GIL):
   ``Runtime`` per run (thread spawn + queue allocation per request, the
   pre-refactor ``run_graph`` cost model).  The refactor's contract: warm
   dynamic scheduling is no slower than per-run-thread scheduling at every
-  worker count (``no_slower`` per row, asserted by the CI smoke job).
+  worker count (``no_slower`` per row, asserted by the CI smoke job);
+* ``suspend_frames`` — fan-in communication (producers feeding consumers
+  over a :class:`~repro.core.Channel`) with *blocking* plain-body consumers
+  (each pins a worker work-conservingly) vs *suspendable* generator-frame
+  consumers (each parks worker-free).  Contract: suspendable bodies are no
+  slower at equal workers (``no_slower`` per row, asserted in CI).
+
+Every row carries ``noise`` — the observed relative spread ``(max-min)/min``
+across its repeats — which the CI workflow surfaces per run: the first step
+toward turning the bench-smoke job into a perf-regression gate (thresholds
+need a characterized noise floor first).
 
 Emits CSV rows (benchmarks.common schema) and ``BENCH_runtime.json``.
 Env knobs: ``BENCH_SMOKE=1`` shrinks sizes for CI; ``BENCH_RUNTIME_JSON``
@@ -24,11 +34,17 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import Runtime, TaskGraph, run_graph
+from repro.core import Channel, Runtime, TaskGraph, run_graph
 
 SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
+FRAME_WORKERS = (2,) if SMOKE else (2, 4)
 JSON_PATH = os.environ.get("BENCH_RUNTIME_JSON", "BENCH_runtime.json")
+
+
+def _spread(samples: List[float]) -> float:
+    """Relative spread across repeats: (max - min) / min."""
+    return round((max(samples) - min(samples)) / max(min(samples), 1e-12), 4)
 
 
 def overlap_graph(n_steps: int = 6, n_children: int = 8, gemm: int = 384,
@@ -78,6 +94,7 @@ def bench(workers: int = 4, repeats: int = 3) -> List[dict]:
             "workers": workers,
             "best_s": round(best, 3),
             "us_per_call": round(best * 1e6, 1),
+            "noise": _spread(times),
         })
     return rows
 
@@ -99,16 +116,17 @@ def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
     (per-run thread spawn — what every pre-refactor ``run_graph`` call
     paid) vs one persistent Runtime serving every run on warm parked
     workers."""
-    fresh_best = warm_best = float("inf")
     graphs = [reuse_graph() for _ in range(iters)]
     run_graph(graphs[0], workers)                     # warm imports/JIT paths
+    fresh_times: List[float] = []
+    warm_times: List[float] = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         for g in graphs:
             rt = Runtime(workers)
             with rt:
                 rt.run(g)
-        fresh_best = min(fresh_best, (time.perf_counter() - t0) / iters)
+        fresh_times.append((time.perf_counter() - t0) / iters)
     rt = Runtime(workers)
     with rt:
         rt.run(graphs[0])                             # spawn outside the clock
@@ -116,7 +134,8 @@ def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
             t0 = time.perf_counter()
             for g in graphs:
                 rt.run(g)
-            warm_best = min(warm_best, (time.perf_counter() - t0) / iters)
+            warm_times.append((time.perf_counter() - t0) / iters)
+    fresh_best, warm_best = min(fresh_times), min(warm_times)
     return {
         "bench": "warm_reuse", "workers": workers,
         "fresh_ms": round(fresh_best * 1e3, 4),
@@ -124,13 +143,64 @@ def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
         "speedup": round(fresh_best / warm_best, 3),
         # generous noise headroom: the claim is "no slower", not "faster"
         "no_slower": bool(warm_best <= fresh_best * 1.25),
+        "noise": _spread(warm_times),
+    }
+
+
+def frames_graph(n_pairs: int, use_frames: bool, work_s: float) -> TaskGraph:
+    """Fan-in communication: ``n_pairs`` consumers each receive one token
+    from a channel fed by ``n_pairs`` independent producers (each doing
+    ``work_s`` of off-GIL 'compute').  Blocking consumers pin their worker
+    at ``ctx.recv`` (work-conservingly); suspendable consumers park."""
+    g = TaskGraph("suspend" if use_frames else "blocking")
+    ch = Channel("bench.tokens")
+    for i in range(n_pairs):
+        if use_frames:
+            def body(ctx, i=i):
+                v = yield ctx.recv(ch)
+                return v
+        else:
+            def body(ctx, i=i):
+                return ctx.recv(ch)
+        g.add(body, name=f"cons{i}")
+    for i in range(n_pairs):
+        def prod(ctx, i=i):
+            time.sleep(work_s)
+            ch.send(i)
+        g.add(prod, name=f"prod{i}")
+    return g
+
+
+def bench_frames(workers: int, repeats: int = 3) -> Dict:
+    """Blocking-body vs suspendable-body throughput on the same fan-in
+    graph.  Contract: suspendable is no slower at equal workers."""
+    n_pairs = 6 if SMOKE else 12
+    work_s = 0.001 if SMOKE else 0.002
+    samples: Dict[str, List[float]] = {"blocking": [], "suspend": []}
+    run_graph(frames_graph(n_pairs, True, work_s), workers)   # warm paths
+    for _ in range(repeats):
+        for mode in ("blocking", "suspend"):
+            g = frames_graph(n_pairs, mode == "suspend", work_s)
+            t0 = time.perf_counter()
+            run_graph(g, workers, timeout=120.0)
+            samples[mode].append(time.perf_counter() - t0)
+    blocking_best = min(samples["blocking"])
+    suspend_best = min(samples["suspend"])
+    return {
+        "bench": "suspend_frames", "workers": workers, "pairs": n_pairs,
+        "blocking_ms": round(blocking_best * 1e3, 3),
+        "suspend_ms": round(suspend_best * 1e3, 3),
+        "speedup": round(blocking_best / suspend_best, 3),
+        "no_slower": bool(suspend_best <= blocking_best * 1.25),
+        "noise": _spread(samples["suspend"]),
     }
 
 
 def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
     out = {
         "bench": "runtime",
-        "meta": {"workers": list(WORKERS), "smoke": SMOKE},
+        "meta": {"workers": list(WORKERS), "frame_workers": list(FRAME_WORKERS),
+                 "smoke": SMOKE},
         "rows": rows,
     }
     with open(path, "w") as fh:
@@ -144,7 +214,10 @@ def main():
     print()
     reuse_rows = [bench_reuse(w) for w in WORKERS]
     emit(reuse_rows)
-    write_json(overlap_rows + reuse_rows)
+    print()
+    frame_rows = [bench_frames(w) for w in FRAME_WORKERS]
+    emit(frame_rows)
+    write_json(overlap_rows + reuse_rows + frame_rows)
     print(f"# wrote {JSON_PATH}")
 
 

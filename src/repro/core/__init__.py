@@ -4,6 +4,10 @@ Public API:
 
 * :class:`TaskGraph` / :class:`Task` / :class:`ParallelSpec` — task graphs
   with nested data-parallel regions.
+* :class:`Channel` / :class:`TaskEvent` / :class:`TaskFrame` — blocking
+  communication primitives and suspendable task frames: generator task
+  bodies suspend on ``yield ctx.recv(ch)`` / ``ctx.wait(ev)`` /
+  ``ctx.yield_()`` without occupying a worker, and resume on any worker.
 * :class:`Runtime` / :func:`run_graph` — the threaded gang-scheduling +
   work-stealing runtime (Algorithms 1 & 2, faithful reproduction).
 * :class:`Simulator` / :func:`simulate` — deterministic discrete-event
@@ -19,16 +23,31 @@ from .policies import HistoryPolicy, HybridPolicy, RandomPolicy, make_policy
 from .runtime import Runtime, run_graph
 from .simulator import DeadlockError, Simulator, simulate
 from .static_schedule import (
+    GangReservation,
     ListScheduler,
     StaticSchedule,
     issue_offsets_from_schedule,
     microbatch_overlap_graph,
 )
-from .taskgraph import ParallelSpec, Task, TaskContext, TaskGraph
+from .taskgraph import (
+    Channel,
+    ChannelEmpty,
+    FrameResume,
+    ParallelSpec,
+    Task,
+    TaskContext,
+    TaskEvent,
+    TaskFrame,
+    TaskGraph,
+)
 from .tracing import Trace
 
 __all__ = [
+    "Channel",
+    "ChannelEmpty",
     "DeadlockError",
+    "FrameResume",
+    "GangReservation",
     "GangState",
     "HistoryPolicy",
     "HybridPolicy",
@@ -40,6 +59,8 @@ __all__ = [
     "StaticSchedule",
     "Task",
     "TaskContext",
+    "TaskEvent",
+    "TaskFrame",
     "TaskGraph",
     "Trace",
     "is_eligible_to_sched",

@@ -178,6 +178,9 @@ class Simulator:
         self.gang_state = self.gang_states[0]  # back-compat alias (ranks=1)
         self.indeg = graph.indegrees()
         self.remaining = len(graph)
+        # gang reservations in fork order: (spawn_tid, gang_id, workers, t)
+        # — consumed by ListScheduler to synthesize replayable placements
+        self.gang_log: List[Tuple[int, int, List[int], float]] = []
         self._region_ids = itertools.count()
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, Tuple[str, int]]] = []
@@ -377,8 +380,10 @@ class Simulator:
             reserved = gs.get_workers(w.wid % self.rank_width, n)
             gs.account_gang([reserved[i % len(reserved)] for i in range(n)])
             base = rank * self.rank_width
+            members = [base + reserved[i % len(reserved)] for i in range(n)]
+            self.gang_log.append((task.tid, region.gang_id, members, t))
             for i in range(n):
-                target = self.workers[base + reserved[i % len(reserved)]]
+                target = self.workers[members[i]]
                 target.gang_deq.append(_ULTJob(region, i))
                 self._event(t + self.fork_overhead, ("w", target.wid))
         elif self.mode == "oversubscribe":

@@ -48,11 +48,25 @@ class ScheduledItem:
 
 
 @dataclasses.dataclass
+class GangReservation:
+    """A gang-scheduled region's frozen reservation: the simulator reserved
+    ``workers[i]`` for ULT ``i`` of the region forked by ``spawn_tid`` at
+    virtual time ``t``.  Carried into static-seeded replay recordings so
+    panel forks replay *placed* instead of falling back to dynamic."""
+
+    spawn_tid: int
+    gang_id: int
+    workers: List[int]
+    t: float
+
+
+@dataclasses.dataclass
 class StaticSchedule:
     n_slots: int
     items: List[ScheduledItem]
     makespan: float
     policy: str
+    gangs: List[GangReservation] = dataclasses.field(default_factory=list)
 
     @property
     def order(self) -> Dict[int, List[ScheduledItem]]:
@@ -129,7 +143,10 @@ class ListScheduler:
             if task is None or e.kind in ("barrier", "idle"):
                 continue
             items.append(ScheduledItem(task.tid, task.name, task.kind, e.worker, e.t0, e.t1))
-        return StaticSchedule(self.n_slots, items, trace.makespan, self.policy)
+        gangs = [GangReservation(tid, gid, list(workers), t)
+                 for tid, gid, workers, t in sim.gang_log]
+        return StaticSchedule(self.n_slots, items, trace.makespan, self.policy,
+                              gangs=gangs)
 
 
 def microbatch_overlap_graph(

@@ -14,13 +14,315 @@ A :class:`TaskGraph` is a DAG of :class:`Task` nodes.  Tasks carry
 
 Dependencies are explicit (OpenMP ``depend``-style, resolved by the runtime)
 — the graph is static; readiness is dynamic.
+
+Suspendable task frames
+-----------------------
+
+Task bodies may be written as *generators*; the runtime then compiles them
+into resumable :class:`TaskFrame`\\ s (the paper's ULT-style suspension,
+§III): yielding one of the :class:`TaskContext` communication requests —
+``yield ctx.recv(channel)`` / ``yield ctx.wait(event)`` /
+``yield ctx.yield_()`` — parks the frame on a waitlist *without occupying a
+worker thread*, and a matching :meth:`Channel.send` / :meth:`TaskEvent.set`
+makes it resumable on any worker.  Plain (non-generator) bodies may call the
+same APIs; they block their kernel thread work-conservingly (the worker
+keeps scheduling other tasks at the blocking point) since Python cannot
+switch ULT stacks.  :class:`Channel` and :class:`TaskEvent` are the
+communication primitives; :class:`FrameResume` is the run-list entry type
+the record-and-replay subsystem uses to reproduce frame interleavings.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+import threading
+import weakref
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# communication primitives + suspendable frames
+# ---------------------------------------------------------------------------
+
+# Global activity epoch: bumped by every Channel.send / TaskEvent.set so the
+# runtime's suspension-deadlock detectors can confirm "nothing changed" across
+# their confirmation window even for sends that found no parked waiter (e.g. a
+# send racing a plain-body ctx.recv poll loop).  This makes detection safe
+# against senders racing the window — not against senders that stay silent
+# past it: wakeups are expected to come from the run's own work.
+_epoch_lock = threading.Lock()
+_activity_epoch = 0
+
+
+def _bump_activity() -> None:
+    global _activity_epoch
+    with _epoch_lock:
+        _activity_epoch += 1
+
+
+def activity_epoch() -> int:
+    with _epoch_lock:
+        return _activity_epoch
+
+
+class ChannelEmpty(Exception):
+    """:meth:`Channel.recv_nowait` on an empty channel."""
+
+
+class Channel:
+    """A multi-producer multi-consumer FIFO for task-internal communication.
+
+    ``send`` never blocks.  Receiving goes through
+    :meth:`TaskContext.recv`: a generator body suspends its frame until an
+    item arrives (the worker keeps scheduling); a plain body blocks its
+    kernel thread work-conservingly.  Delivery to parked frames happens
+    under the channel lock, so a ``send`` racing a frame park can never be
+    lost: either the parking side sees the item, or the sender sees the
+    waiter.
+    """
+
+    __slots__ = ("name", "_lock", "_items", "_waiters")
+
+    def __init__(self, name: str = "channel"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._items: Deque[Any] = deque()
+        self._waiters: Deque[Callable[[Any], None]] = deque()
+
+    def send(self, value: Any) -> None:
+        with self._lock:
+            waiter = self._waiters.popleft() if self._waiters else None
+            if waiter is None:
+                self._items.append(value)
+        _bump_activity()
+        if waiter is not None:
+            waiter(value)
+
+    def try_recv(self) -> Tuple[bool, Any]:
+        with self._lock:
+            if self._items:
+                return True, self._items.popleft()
+            return False, None
+
+    def recv_nowait(self) -> Any:
+        ok, value = self.try_recv()
+        if not ok:
+            raise ChannelEmpty(f"channel {self.name!r} is empty")
+        return value
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    # -- park/cancel protocol (used by the dispatch strategies) -------------
+    def _park(self, waiter: Callable[[Any], None]) -> Tuple[str, Any]:
+        """Atomically take an item or register ``waiter``.  Returns
+        ``("ready", item)`` or ``("parked", None)``."""
+        with self._lock:
+            if self._items:
+                return "ready", self._items.popleft()
+            self._waiters.append(waiter)
+            return "parked", None
+
+    def _cancel(self, waiter: Callable[[Any], None]) -> bool:
+        """Remove a registered waiter; False if it already fired."""
+        with self._lock:
+            try:
+                self._waiters.remove(waiter)
+                return True
+            except ValueError:
+                return False
+
+
+class TaskEvent:
+    """A one-shot event tasks can :meth:`TaskContext.wait` on.
+
+    ``set()`` is sticky; frames parked on the event become resumable, later
+    waits return immediately.
+    """
+
+    __slots__ = ("name", "_lock", "_set", "_waiters")
+
+    def __init__(self, name: str = "event"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._set = False
+        self._waiters: Deque[Callable[[Any], None]] = deque()
+
+    def is_set(self) -> bool:
+        with self._lock:
+            return self._set
+
+    def set(self) -> None:
+        with self._lock:
+            if self._set:
+                return
+            self._set = True
+            waiters = list(self._waiters)
+            self._waiters.clear()
+        _bump_activity()
+        for waiter in waiters:
+            waiter(None)
+
+    def _park(self, waiter: Callable[[Any], None]) -> Tuple[str, Any]:
+        with self._lock:
+            if self._set:
+                return "ready", None
+            self._waiters.append(waiter)
+            return "parked", None
+
+    def _cancel(self, waiter: Callable[[Any], None]) -> bool:
+        with self._lock:
+            try:
+                self._waiters.remove(waiter)
+                return True
+            except ValueError:
+                return False
+
+
+class FrameRequest:
+    """What a suspended generator body is waiting for (yielded to the
+    worker loop).  ``try_immediate`` is the eager fast path (consume inline
+    without suspending); ``park`` registers a waker under the primitive's
+    lock so no wakeup can be lost."""
+
+    kind = "?"
+    __slots__ = ()
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        return False, None
+
+    def park(self, waiter: Callable[[Any], None]) -> Tuple[str, Any]:
+        raise NotImplementedError
+
+    def cancel(self, waiter: Callable[[Any], None]) -> bool:
+        return False
+
+    def describe(self) -> str:
+        return self.kind
+
+
+class RecvRequest(FrameRequest):
+    kind = "recv"
+    __slots__ = ("channel",)
+
+    def __init__(self, channel: Channel):
+        self.channel = channel
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        return self.channel.try_recv()
+
+    def park(self, waiter):
+        return self.channel._park(waiter)
+
+    def cancel(self, waiter):
+        return self.channel._cancel(waiter)
+
+    def describe(self) -> str:
+        return f"recv({self.channel.name})"
+
+
+class WaitRequest(FrameRequest):
+    kind = "wait"
+    __slots__ = ("event",)
+
+    def __init__(self, event: TaskEvent):
+        self.event = event
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        return (True, None) if self.event.is_set() else (False, None)
+
+    def park(self, waiter):
+        return self.event._park(waiter)
+
+    def cancel(self, waiter):
+        return self.event._cancel(waiter)
+
+    def describe(self) -> str:
+        return f"wait({self.event.name})"
+
+
+class YieldRequest(FrameRequest):
+    """A cooperative yield: the frame goes to the back of the resume queue
+    so the worker can schedule other work; it is immediately resumable."""
+
+    kind = "yield"
+    __slots__ = ()
+
+    def park(self, waiter):
+        return "ready", None
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameResume:
+    """A run-list entry: resume segment ``seg`` (1-based) of task ``tid``'s
+    suspended frame.  Recorded by the dynamic dispatch, reproduced by
+    replay (JSON-encoded as ``["r", tid, seg]``)."""
+
+    tid: int
+    seg: int
+
+
+class TaskFrame:
+    """A resumable execution of one task whose body is a generator.
+
+    The worker loop drives the generator via :meth:`step`; each yielded
+    :class:`FrameRequest` either completes inline (eager mode) or parks the
+    frame.  ``resumes`` counts executed resume segments (segment 0 is the
+    initial run), ``last_worker`` is the resume-locality hint, and
+    ``resumable``/``resume_value`` carry the wakeup handshake.
+    """
+
+    __slots__ = ("task", "ctx", "gen", "resumes", "resume_value",
+                 "last_worker", "resumable", "request", "waker",
+                 "__weakref__")
+
+    def __init__(self, task: "Task", ctx: "TaskContext", gen: Any):
+        self.task = task
+        self.ctx = ctx
+        self.gen = gen
+        self.resumes = 0
+        self.resume_value: Any = None
+        self.last_worker = 0
+        self.resumable = False
+        self.request: Optional[FrameRequest] = None
+        self.waker: Optional[Callable[[Any], None]] = None
+
+    def step(self, value: Any = None) -> Tuple[str, Any]:
+        """Advance the generator once.  Returns ``("done", result)`` or
+        ``("suspend", request)``."""
+        try:
+            req = self.gen.send(value)
+        except StopIteration as stop:
+            return "done", stop.value
+        if not isinstance(req, FrameRequest):
+            raise TypeError(
+                f"task {self.task.name!r} yielded {req!r}; generator task "
+                "bodies must yield ctx.recv(channel) / ctx.wait(event) / "
+                "ctx.yield_()")
+        return "suspend", req
+
+    def close(self) -> None:
+        self.gen.close()
+
+
+# Every parked frame is registered here (and removed on wake/cancel) so the
+# test suite can assert no frame is orphaned after aborts — the frame
+# analogue of the worker-thread leak check.
+_parked_frames: "weakref.WeakSet[TaskFrame]" = weakref.WeakSet()
+
+
+def note_parked(frame: TaskFrame) -> None:
+    _parked_frames.add(frame)
+
+
+def note_unparked(frame: TaskFrame) -> None:
+    _parked_frames.discard(frame)
+
+
+def live_parked_frames() -> List[TaskFrame]:
+    return list(_parked_frames)
 
 
 @dataclasses.dataclass
@@ -63,12 +365,19 @@ class Task:
 class TaskContext:
     """Handed to task bodies at execution time.
 
-    Provides predecessor results (``ctx[dep_task]`` / ``ctx.result(tid)``)
-    and, when run under the threaded runtime, the parallel-region primitives
-    (``ctx.parallel`` / ``ctx.barrier``) used by gang-scheduled regions.
+    Provides predecessor results (``ctx[dep_task]`` / ``ctx.result(tid)``),
+    the parallel-region primitives (``ctx.parallel`` / ``ctx.barrier``) used
+    by gang-scheduled regions, and the suspension APIs (``ctx.recv`` /
+    ``ctx.wait`` / ``ctx.yield_``).  In a generator body these return
+    :class:`FrameRequest` objects that MUST be yielded (``value = yield
+    ctx.recv(ch)``); in a plain body they block the worker
+    work-conservingly.
     """
 
-    def __init__(self, graph: "TaskGraph", task: Task, results: Dict[int, Any], runtime: Any = None):
+    _in_frame = False           # set by the frame driver for generator bodies
+
+    def __init__(self, graph: "TaskGraph", task: Task, results: Dict[int, Any],
+                 runtime: Any = None):
         self.graph = graph
         self.task = task
         self._results = results
@@ -76,6 +385,41 @@ class TaskContext:
 
     def result(self, tid: int) -> Any:
         return self._results[tid]
+
+    # -- suspension / communication (the paper's blocking extensions) -------
+    def recv(self, channel: Channel) -> Any:
+        """Receive from ``channel``.  Generator body: ``value = yield
+        ctx.recv(ch)`` suspends the frame until an item arrives.  Plain
+        body: blocks this worker (which keeps scheduling other work)."""
+        if self._in_frame:
+            return RecvRequest(channel)
+        rt = self.runtime
+        if rt is None or not hasattr(rt, "ctx_recv"):
+            return channel.recv_nowait()        # serial context: no waiting
+        return rt.ctx_recv(channel, self)
+
+    def wait(self, event: TaskEvent) -> Any:
+        """Wait for ``event``; same generator/plain split as :meth:`recv`."""
+        if self._in_frame:
+            return WaitRequest(event)
+        rt = self.runtime
+        if rt is None or not hasattr(rt, "ctx_wait"):
+            if not event.is_set():
+                raise RuntimeError(
+                    f"wait on unset event {event.name!r} outside a runtime")
+            return None
+        return rt.ctx_wait(event, self)
+
+    def yield_(self) -> Any:
+        """A cooperative scheduling point.  Generator body: ``yield
+        ctx.yield_()`` parks the frame at the back of the resume queue.
+        Plain body: the worker serves one unit of other work inline."""
+        if self._in_frame:
+            return YieldRequest()
+        rt = self.runtime
+        if rt is None or not hasattr(rt, "ctx_yield"):
+            return None
+        return rt.ctx_yield(self)
 
     def parallel(self, n_threads: int, body, *, gang=None):
         """Fork/join a nested parallel region (delegates to the runtime;

@@ -12,6 +12,17 @@ pluggable :class:`DispatchStrategy`:
   placements with monotonic issue order, run-ahead and stall-triggered
   dynamic fallback.
 
+Both dispatches execute *suspendable task frames*: generator task bodies
+yield ``ctx.recv``/``ctx.wait``/``ctx.yield_`` requests and are parked
+without occupying their worker (soft-blocked — excluded from Fig.-1
+hard-block accounting), then resumed on any worker.  Dynamic treats resumed
+frames as locality-preferring stealable work; replay reproduces the
+recorded resume segmentation (``FrameResume`` run-list entries).
+
+:class:`CoreRegistry` / :func:`shared_core` add process-global core
+sharing: one refcounted core per worker count serves every pool/facade in
+the process, capping threads across tenants.
+
 The public entry points remain the facades:
 :class:`~repro.core.runtime.Runtime` (dynamic),
 :class:`~repro.replay.executor.ReplayExecutor` (replay) and
@@ -19,15 +30,24 @@ The public entry points remain the facades:
 time from this substrate.
 """
 
+from .. import core as _core  # noqa: F401  (initialize repro.core first:
+# repro.core.runtime imports repro.exec.core, so letting the package cycle
+# start HERE — instead of inside .core's module body — keeps
+# ``import repro.exec`` working as a first import)
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 from .dynamic import DynamicDispatch
+from .registry import REGISTRY, CoreRegistry, release_shared_core, shared_core
 from .replay import ReplayDispatch, ReplayError
 
 __all__ = [
+    "CoreRegistry",
     "DispatchStrategy",
     "DynamicDispatch",
     "ExecutorCore",
     "GangRegion",
+    "REGISTRY",
     "ReplayDispatch",
     "ReplayError",
+    "release_shared_core",
+    "shared_core",
 ]

@@ -138,18 +138,39 @@ class GangRegion:
     def finished(self) -> bool:
         return self.done == self.n_threads
 
+    def notify_nowait(self) -> None:
+        """Best-effort wakeup of the region's waiters.  Non-blocking on the
+        region lock: abort paths (``wake_all``) may run on a thread that
+        already holds this very cv (a barrier waiter polls the deadlock
+        detector while inside ``with self.cv``) — a lock holder is awake by
+        definition, and every waiter re-polls on ``block_poll`` timeouts, so
+        skipping a held lock costs latency, never correctness."""
+        if self.cv.acquire(blocking=False):
+            try:
+                self.cv.notify_all()
+            finally:
+                self.cv.release()
+
 
 class _RunState:
     """Abort state scoped to ONE run.  A fresh object is installed per run,
     so a caller that drained its run can never observe the *next* run's
     failure (or lose its own timeout to the next run's reset) on a shared
-    core — it holds a reference to its own run's state."""
+    core — it holds a reference to its own run's state.
 
-    __slots__ = ("failure", "deadlock")
+    ``suspended`` counts frames currently parked on a channel/event (soft-
+    blocked: their workers are free, so they are *excluded* from the Fig.-1
+    hard-block count); ``resume_epoch`` increments on every frame wakeup so
+    the suspension-deadlock detector can confirm quiescence across its
+    confirmation window."""
+
+    __slots__ = ("failure", "deadlock", "suspended", "resume_epoch")
 
     def __init__(self) -> None:
         self.failure: Optional[BaseException] = None
         self.deadlock: Optional[str] = None
+        self.suspended = 0
+        self.resume_epoch = 0
 
 
 class DispatchStrategy:
@@ -204,6 +225,12 @@ class DispatchStrategy:
 
     def wake_all(self) -> None:
         """Wake every waiter this strategy parked (called on abort)."""
+
+    def drain_frames(self) -> None:
+        """Cancel every parked :class:`~repro.core.taskgraph.TaskFrame` of
+        the current run (called by the core when a run aborts, and by
+        ``begin_run`` before reuse) so no frame stays orphaned on a channel
+        or event that outlives the run."""
 
 
 class ExecutorCore:
@@ -332,25 +359,70 @@ class ExecutorCore:
         with self._blocked_lock:
             self._blocked_count -= 1
 
+    # -- suspended-frame accounting (soft-blocked: worker-free) ------------
+    def note_frame_suspended(self) -> None:
+        run = self._run_state
+        with self._blocked_lock:
+            run.suspended += 1
+
+    def note_frame_resumed(self) -> None:
+        run = self._run_state
+        with self._blocked_lock:
+            run.suspended -= 1
+            run.resume_epoch += 1
+
+    @property
+    def suspended_frames(self) -> int:
+        with self._blocked_lock:
+            return self._run_state.suspended
+
+    @property
+    def resume_epoch(self) -> int:
+        with self._blocked_lock:
+            return self._run_state.resume_epoch
+
     def check_deadlock(self) -> None:
         """The Fig. 1 state: every worker is stuck inside a *blocking*
         barrier (kernel-thread semantics — cannot schedule anything) while
         the units that would satisfy those barriers sit starved with the
         dispatch.  Safe under oversubscription: join-waiters keep stealing
-        and are never counted as hard-blocked."""
+        and are never counted as hard-blocked; frames suspended on a
+        channel/event are soft-blocked (their worker is free) and never
+        count either — they appear in the message only as context."""
+        if self.aborted:
+            # the run is already tearing down: barrier waiters drain their
+            # enter_blocked accounting on the way out, and a transiently
+            # full blocked count must not masquerade as a fresh deadlock
+            return
         with self._blocked_lock:
             blocked = self._blocked_count
+            suspended = self._run_state.suspended
         if blocked < self.n_workers:
             return
         dispatch = self._dispatch
         starved = dispatch.pending_units() if dispatch is not None else 0
         msg = (f"deadlock: all {blocked} workers blocked at blocking "
-               f"barriers; {starved} ULT(s)/task(s) starved")
+               f"barriers; {starved} ULT(s)/task(s) starved"
+               + (f"; {suspended} frame(s) suspended" if suspended else ""))
         self._run_state.deadlock = msg
         self.signal_done()
         if dispatch is not None:
             dispatch.wake_all()
         raise DeadlockError(msg)
+
+    def frame_deadlock(self, msg: str) -> None:
+        """Report a *suspension* deadlock (all remaining work is frames
+        parked on channels/events that nothing left in the run can satisfy).
+        Unlike :meth:`check_deadlock` the reporting worker is idle, not
+        blocked — it records the state and lets every worker observe
+        ``aborted``."""
+        run = self._run_state
+        if run.deadlock is None and run.failure is None:
+            run.deadlock = msg
+        self.signal_done()
+        dispatch = self._dispatch
+        if dispatch is not None:
+            dispatch.wake_all()
 
     # ------------------------------------------------------------------
     # the worker loop
@@ -418,11 +490,14 @@ class ExecutorCore:
                             f"{timeout}s")
                         break
         if self._shutdown and not dispatch.drained:
+            dispatch.drain_frames()
             raise RuntimeError("executor core was shut down mid-run")
         if run_state.deadlock is not None:
+            dispatch.drain_frames()
             raise DeadlockError(run_state.deadlock)
         if run_state.failure is not None:
             failure = run_state.failure
             dispatch.wake_all()
+            dispatch.drain_frames()
             raise failure
         return dispatch.results()

@@ -20,6 +20,21 @@ old monolithic ``Runtime`` so it runs on the shared
 Record-and-replay instrumentation (per-worker start orders, steals, gang
 placements, fork order) lives here too: recording is a property of the
 *dynamic* schedule, not of the substrate.
+
+Suspendable task frames (the paper's ULT-style preemption): a task body
+written as a generator compiles into a :class:`~repro.core.taskgraph.TaskFrame`.
+Yielding ``ctx.recv``/``ctx.wait``/``ctx.yield_`` parks the frame on the
+waited-on primitive and *frees the worker*; a matching ``send``/``set``
+moves the frame onto the resume deque of the worker that last ran it
+(resume locality — siblings keep their cache affinity), where it is a
+stealable work item under the same Algorithm-2 victim policies as fresh
+tasks.  Suspended frames are soft-blocked: they are excluded from the
+Fig.-1 hard-block count, and a run whose only remaining work is frames
+nobody can resume is detected as a *suspension* deadlock instead of
+hanging.  With recording on, every yield point suspends (no inline fast
+path) so each resume segment lands in the run lists as a
+:class:`~repro.core.taskgraph.FrameResume` entry and replay can reproduce
+the exact frame interleaving.
 """
 
 from __future__ import annotations
@@ -28,12 +43,24 @@ import itertools
 import threading
 import time
 from collections import deque
+from types import GeneratorType
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from ..core.gang import GangState, is_eligible_to_sched
 from ..core.policies import make_policy
 from ..core.simulator import DeadlockError
-from ..core.taskgraph import Task, TaskContext, TaskGraph
+from ..core.taskgraph import (
+    Channel,
+    FrameResume,
+    Task,
+    TaskContext,
+    TaskEvent,
+    TaskFrame,
+    TaskGraph,
+    activity_epoch,
+    note_parked,
+    note_unparked,
+)
 from ..core.tracing import Trace
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
@@ -84,8 +111,24 @@ class DynamicDispatch(DispatchStrategy):
         self._local_locks = [threading.Lock() for _ in range(n_workers)]
         self._gang_deqs: List[Deque[_GangULT]] = [deque() for _ in range(n_workers)]
         self._gang_locks = [threading.Lock() for _ in range(n_workers)]
+        # resumed frames: per-worker deques keyed by resume locality (the
+        # worker that last ran the frame); stealable like fresh tasks
+        self._resume_deqs: List[Deque[TaskFrame]] = [deque() for _ in range(n_workers)]
+        self._resume_locks = [threading.Lock() for _ in range(n_workers)]
         self._policies = [make_policy(policy, w, n_workers, seed)
                           for w in range(n_workers)]
+
+        # parked (suspended) frames of the current run, keyed by task id
+        self._suspended: Dict[int, TaskFrame] = {}
+        self._suspend_lock = threading.Lock()
+        # no-progress detection inputs: per-worker unit-nesting depth and a
+        # "top of stack is blocked in ctx.recv/ctx.wait" flag (each worker
+        # writes only its own slot; readers confirm via the wakeup epochs)
+        self._depth = [0] * n_workers
+        self._stalled = [False] * n_workers
+        # live gang regions (abort must wake their barrier waiters promptly)
+        self._live_regions: Dict[int, GangRegion] = {}
+        self._region_lock = threading.Lock()
 
         # worker context stacks: list of (gang_id, nest_level)
         self._contexts: List[List[Tuple[int, int]]] = [[] for _ in range(n_workers)]
@@ -127,6 +170,19 @@ class DynamicDispatch(DispatchStrategy):
                 if ult.region.gang_id >= 0:
                     self.gang_state.release_gang_thread(w)
             dq.clear()
+        # frames of an aborted run: cancel parked ones, close resumed-but-
+        # never-rerun ones (the orphaned-frame leak check covers both)
+        self.drain_frames()
+        for w, dq in enumerate(self._resume_deqs):
+            with self._resume_locks[w]:
+                stale = list(dq)
+                dq.clear()
+            for frame in stale:
+                frame.close()
+        with self._region_lock:
+            self._live_regions.clear()
+        self._depth = [0] * self.n_workers
+        self._stalled = [False] * self.n_workers
         self._contexts = [[] for _ in range(self.n_workers)]
         if self._recording:
             self._rec_entries = [[] for _ in range(self.n_workers)]
@@ -146,11 +202,20 @@ class DynamicDispatch(DispatchStrategy):
 
     def pending_units(self) -> int:
         return (sum(len(d) for d in self._gang_deqs)
-                + sum(len(d) for d in self._locals))
+                + sum(len(d) for d in self._locals)
+                + sum(len(d) for d in self._resume_deqs))
 
     def wake_all(self) -> None:
         with self._work_available:
             self._work_available.notify_all()
+        # barrier waiters inside live gang regions must observe the abort
+        # promptly (and drain their hard-blocked accounting on the way out);
+        # non-blocking: the caller may itself hold a region cv (a barrier
+        # waiter runs the deadlock detector inside `with region.cv`)
+        with self._region_lock:
+            regions = list(self._live_regions.values())
+        for region in regions:
+            region.notify_nowait()
 
     def worker_loop(self, w: int) -> None:
         core = self.core
@@ -161,6 +226,50 @@ class DynamicDispatch(DispatchStrategy):
                     if self.drained or core.aborted:
                         return
                     self._work_available.wait(timeout=self.steal_backoff * 50)
+                if not self.drained and not core.aborted:
+                    self._check_no_progress()
+
+    def _active_workers(self) -> int:
+        """Workers that can still make progress on their own: executing a
+        unit whose stack top is NOT blocked in a plain-body recv/wait."""
+        return sum(1 for w in range(self.n_workers)
+                   if self._depth[w] > 0 and not self._stalled[w])
+
+    def _check_no_progress(self) -> None:
+        """Suspension deadlock: nothing queued, no worker executing freely
+        (each is idle or stalled at a plain-body recv/wait), yet tasks
+        remain — every wakeup would have to come from work that no longer
+        exists.  Confirmed across a poll window against both wakeup epochs
+        (frame resumes and raw channel/event activity), so a sender racing
+        the window is never mistaken for quiescence.  The contract this
+        enforces: wakeups come from the run's own work — a feeder outside
+        the graph that stays silent past the window is indistinguishable
+        from deadlock and aborts the run.  Workers hard-blocked at barriers
+        count as active here; the Fig.-1 detector
+        (:meth:`ExecutorCore.check_deadlock`) owns that state."""
+        core = self.core
+        if (self.drained or core.aborted or self.pending_units() > 0
+                or self._active_workers() > 0):
+            return
+        suspended, stalled = core.suspended_frames, sum(self._stalled)
+        if suspended <= 0 and stalled == 0:
+            return
+        resume_epoch, act_epoch = core.resume_epoch, activity_epoch()
+        time.sleep(core.block_poll)
+        if (not self.drained and not core.aborted
+                and self.pending_units() == 0 and self._active_workers() == 0
+                and (core.suspended_frames > 0 or sum(self._stalled) > 0)
+                and core.resume_epoch == resume_epoch
+                and activity_epoch() == act_epoch):
+            with self._suspend_lock:
+                waits = [f"{f.task.name}<-{f.request.describe()}"
+                         for f in self._suspended.values()
+                         if f.request is not None][:6]
+            core.frame_deadlock(
+                f"suspension deadlock: {core.suspended_frames} frame(s) "
+                f"suspended ({', '.join(waits)}), {sum(self._stalled)} "
+                "worker(s) blocked in task-body recv/wait, and no runnable "
+                "work left to satisfy them")
 
     # ------------------------------------------------------------------
     # queues
@@ -187,6 +296,11 @@ class DynamicDispatch(DispatchStrategy):
             dq = self._locals[victim]
             return dq.popleft() if dq else None
 
+    def _pop_resume(self, victim: int) -> Optional[TaskFrame]:
+        with self._resume_locks[victim]:
+            dq = self._resume_deqs[victim]
+            return dq.popleft() if dq else None
+
     def _pop_gang(self, thief: int, victim: int) -> Optional[_GangULT]:
         ctx = self._contexts[thief]
         cur_gang, cur_nest = (ctx[-1] if ctx else (-1, 0))
@@ -206,13 +320,17 @@ class DynamicDispatch(DispatchStrategy):
     # ------------------------------------------------------------------
     # scheduling
     def schedule_once(self, w: int) -> bool:
-        """One scheduling point: gang deque > local deque > steal.  Returns
-        True if a unit of work was executed."""
+        """One scheduling point: gang deque > resumed frames > local deque >
+        steal.  Returns True if a unit of work was executed."""
         if self.core.aborted:
             return False
         ult = self._pop_gang(w, w)
         if ult is not None:
             self._run_gang_ult(w, ult)
+            return True
+        frame = self._pop_resume(w)
+        if frame is not None:
+            self._run_frame_segment(w, frame)
             return True
         task = self._pop_local(w)
         if task is not None:
@@ -225,24 +343,38 @@ class DynamicDispatch(DispatchStrategy):
         if victim != w:
             got = self._pop_gang(w, victim)
             if got is None:
+                got = self._pop_resume(victim)
+            if got is None:
                 got = self._steal_local(victim)
         pol.record(victim, got is not None)
         if got is None:
             return False
         if self._recording:
-            entry = (got.region.spawn_tid, got.thread_num) \
-                if isinstance(got, _GangULT) and got.region.spawn_task is not None \
-                else (got.tid if not isinstance(got, _GangULT) else None)
+            if isinstance(got, _GangULT):
+                entry = (got.region.spawn_tid, got.thread_num) \
+                    if got.region.spawn_task is not None else None
+            elif isinstance(got, TaskFrame):
+                entry = FrameResume(got.task.tid, got.resumes + 1)
+            else:
+                entry = got.tid
             if entry is not None:
                 self._rec_steals[w].append((victim, entry))
         if isinstance(got, _GangULT):
             self._run_gang_ult(w, got)
+        elif isinstance(got, TaskFrame):
+            self._run_frame_segment(w, got)
         else:
             self._run_task(w, got)
         return True
 
     # ------------------------------------------------------------------
     # task execution
+    def _begin_unit(self, w: int) -> None:
+        self._depth[w] += 1       # own slot only; no lock needed
+
+    def _end_unit(self, w: int) -> None:
+        self._depth[w] -= 1
+
     def _run_task(self, w: int, task: Task) -> None:
         t0 = time.perf_counter()
         if self._recording:
@@ -253,17 +385,133 @@ class DynamicDispatch(DispatchStrategy):
                     self._rec_comms.append(task.tid)
         ctx = TaskContext(self._graph, task, self._results, runtime=self)
         ctx.worker_id = w  # type: ignore[attr-defined]
+        self._begin_unit(w)
         try:
-            result = task.fn(ctx) if task.fn is not None else None
-        except BaseException as e:  # noqa: BLE001 - propagate to run()
-            self.core.fail(e)
-            return
+            try:
+                result = task.fn(ctx) if task.fn is not None else None
+            except BaseException as e:  # noqa: BLE001 - propagate to run()
+                self.core.fail(e)
+                return
+            if isinstance(result, GeneratorType):
+                # generator body => suspendable frame (segment 0 runs now)
+                ctx._in_frame = True
+                frame = TaskFrame(task, ctx, result)
+                frame.last_worker = w
+                self._advance_frame(w, frame, t0)
+                return
+        finally:
+            self._end_unit(w)
         t1 = time.perf_counter()
         if self.trace_enabled:
             self.trace.record(w, t0, t1, task.kind, task.name)
         with self._results_lock:
             self._results[task.tid] = result
         self._complete(w, task)
+
+    # ------------------------------------------------------------------
+    # suspendable frames
+    def _run_frame_segment(self, w: int, frame: TaskFrame) -> None:
+        """Execute one resume segment of a frame popped off a resume deque
+        (possibly stolen — ``w`` need not be ``frame.last_worker``)."""
+        frame.resumes += 1
+        if self._recording:
+            self._rec_entries[w].append(FrameResume(frame.task.tid, frame.resumes))
+        frame.ctx.worker_id = w  # type: ignore[attr-defined]
+        frame.last_worker = w
+        t0 = time.perf_counter()
+        self._begin_unit(w)
+        try:
+            self._advance_frame(w, frame, t0)
+        finally:
+            self._end_unit(w)
+
+    def _advance_frame(self, w: int, frame: TaskFrame, t0: float) -> None:
+        """Drive the generator until it completes or must park.  Without
+        recording, immediately satisfiable requests (non-empty channel, set
+        event) are consumed inline; with recording on, every request parks
+        so the resume segment is observable as a run-list entry."""
+        core = self.core
+        value = frame.resume_value
+        frame.resume_value = None
+        while True:
+            try:
+                status, payload = frame.step(value)
+            except BaseException as e:  # noqa: BLE001 - propagate to run()
+                core.fail(e)
+                return
+            if status == "done":
+                t1 = time.perf_counter()
+                if self.trace_enabled:
+                    self.trace.record(w, t0, t1, frame.task.kind, frame.task.name)
+                with self._results_lock:
+                    self._results[frame.task.tid] = payload
+                self._complete(w, frame.task)
+                return
+            request = payload
+            if not self._recording:
+                ok, value = request.try_immediate()
+                if ok:
+                    continue
+            if self.trace_enabled:
+                self.trace.record(w, t0, time.perf_counter(), frame.task.kind,
+                                  f"{frame.task.name}~{request.kind}")
+            self._park_frame(w, frame, request)
+            return
+
+    def _park_frame(self, w: int, frame: TaskFrame, request) -> None:
+        core = self.core
+        frame.last_worker = w
+
+        def waker(value=None, *, _frame=frame):
+            self._resume_frame(_frame, value)
+
+        frame.request = request
+        frame.waker = waker
+        with self._suspend_lock:
+            self._suspended[frame.task.tid] = frame
+        note_parked(frame)
+        core.note_frame_suspended()
+        status, value = request.park(waker)
+        if status == "ready":
+            # the primitive was already satisfied (or this is a plain
+            # yield): the frame is immediately resumable, via the queue so
+            # other work interleaves — and so recording sees the segment
+            waker(value)
+        elif core.aborted:
+            # the run died while we parked; nobody will drain us later
+            self._discard_parked(frame)
+
+    def _resume_frame(self, frame: TaskFrame, value: Any) -> None:
+        """Waker target: move a parked frame onto the resume deque of its
+        locality worker.  Idempotent against a racing cancel."""
+        with self._suspend_lock:
+            if self._suspended.pop(frame.task.tid, None) is None:
+                return
+        note_unparked(frame)
+        frame.resume_value = value
+        frame.request = None
+        frame.waker = None
+        self.core.note_frame_resumed()
+        target = frame.last_worker
+        with self._resume_locks[target]:
+            self._resume_deqs[target].append(frame)
+        self._notify_work()
+
+    def _discard_parked(self, frame: TaskFrame) -> None:
+        with self._suspend_lock:
+            if self._suspended.pop(frame.task.tid, None) is None:
+                return
+        note_unparked(frame)
+        if frame.request is not None:
+            frame.request.cancel(frame.waker)
+        self.core.note_frame_resumed()   # keep the run's suspend count balanced
+        frame.close()
+
+    def drain_frames(self) -> None:
+        with self._suspend_lock:
+            frames = list(self._suspended.values())
+        for frame in frames:
+            self._discard_parked(frame)
 
     def _complete(self, w: int, task: Task) -> None:
         newly_ready: List[Task] = []
@@ -337,23 +585,71 @@ class DynamicDispatch(DispatchStrategy):
                 for i in range(n_threads):
                     with self._gang_locks[w]:
                         self._gang_deqs[w].append(_GangULT(region, i))
+        with self._region_lock:
+            self._live_regions[region.rid] = region
         self._notify_work()
 
         # join: the spawning worker helps out at this scheduling point —
         # paper: gang ULTs at a join barrier steal (eligible) work.
-        while not region.finished:
+        try:
+            while not region.finished:
+                if core.aborted:
+                    raise DeadlockError(core.abort_reason())
+                progressed = self.schedule_once(w)
+                if not progressed and not region.finished:
+                    # join-waiters retry stealing, so they are NOT counted as
+                    # hard-blocked (only blocking barriers are) — but they do
+                    # poll the detector for barrier deadlocks elsewhere.
+                    with region.cv:
+                        if not region.finished:
+                            if not region.cv.wait(timeout=core.block_poll):
+                                core.check_deadlock()
+        finally:
+            with self._region_lock:
+                self._live_regions.pop(region.rid, None)
+        return list(region.results)
+
+    # ------------------------------------------------------------------
+    # plain-body blocking communication (work-conserving kernel-thread wait)
+    def ctx_recv(self, channel: Channel, ctx: TaskContext) -> Any:
+        return self._blocking_wait(channel.try_recv)
+
+    def ctx_wait(self, event: TaskEvent, ctx: TaskContext) -> None:
+        self._blocking_wait(
+            lambda: ((True, None) if event.is_set() else (False, None)))
+
+    def ctx_yield(self, ctx: TaskContext) -> None:
+        """Plain-body cooperative scheduling point: serve one unit inline."""
+        self.schedule_once(self.core.worker_id())
+
+    def _blocking_wait(self, poll: Callable[[], Tuple[bool, Any]]) -> Any:
+        """Block a plain (non-generator) body until ``poll`` succeeds.  The
+        worker is NOT hard-blocked: it keeps serving other work at this
+        scheduling point (Python cannot switch ULT stacks, so this is the
+        strongest preemption a plain body can get — generators suspend for
+        real).  While nothing is schedulable the worker is flagged stalled
+        and runs the no-progress detector: a wait no remaining work can
+        satisfy raises DeadlockError instead of hanging."""
+        core = self.core
+        w = core.worker_id()
+        while True:
+            ok, value = poll()
+            if ok:
+                return value
             if core.aborted:
                 raise DeadlockError(core.abort_reason())
-            progressed = self.schedule_once(w)
-            if not progressed and not region.finished:
-                # join-waiters retry stealing, so they are NOT counted as
-                # hard-blocked (only blocking barriers are) — but they do
-                # poll the detector for barrier deadlocks elsewhere.
-                with region.cv:
-                    if not region.finished:
-                        if not region.cv.wait(timeout=core.block_poll):
-                            core.check_deadlock()
-        return list(region.results)
+            if self.schedule_once(w):
+                continue
+            self._stalled[w] = True
+            try:
+                with self._work_available:
+                    self._work_available.wait(timeout=self.steal_backoff * 50)
+                ok, value = poll()
+                if ok:
+                    return value
+                self._check_no_progress()
+            finally:
+                self._stalled[w] = False
 
     def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
         region = ult.region

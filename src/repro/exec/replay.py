@@ -32,6 +32,17 @@ list-predecessor edges embed in one global time order (acyclic); the
 earliest unfinished entry is always runnable by its owner, and the fallback
 only adds work, never removes readiness.
 
+Suspendable frames replay deterministically: a recorded run (instrumentation
+forces a suspension at every ``yield``) stores each resume segment as a
+:class:`~repro.core.taskgraph.FrameResume` run-list entry.  On replay,
+generator bodies *always* suspend at their yield points (even when the
+channel already has data — the recorded segmentation is reproduced, not
+re-decided); a frame becomes *resumable* when its channel send / event set
+arrives, and the recorded owner executes segment ``seg`` at its recorded
+list position, gated by a per-``(tid, seg)`` claim so fallback helpers
+never run a segment twice.  Suspended frames are soft-blocked: their
+workers keep walking their lists.
+
 A :class:`ReplayDispatch` is *warm state*: the run lists, placements and
 owner map are computed once per recording, and the serving pool keeps one
 dispatch per shape while leasing worker time from a shared per-worker-count
@@ -41,10 +52,23 @@ core.
 from __future__ import annotations
 
 import threading
+import time
+from types import GeneratorType
 from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Tuple
 
 from ..core.simulator import DeadlockError
-from ..core.taskgraph import Task, TaskContext, TaskGraph
+from ..core.taskgraph import (
+    Channel,
+    FrameResume,
+    Task,
+    TaskContext,
+    TaskEvent,
+    TaskFrame,
+    TaskGraph,
+    activity_epoch,
+    note_parked,
+    note_unparked,
+)
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
 if TYPE_CHECKING:  # avoid a circular import at load time (exec <-> replay)
@@ -73,6 +97,11 @@ class ReplayDispatch(DispatchStrategy):
         self._issue_set = set(self._issue_order)
         # spawn_tid -> recorded owner worker of every entry, for wakeups
         self._owner: Dict[int, int] = recording.owner_of()
+        # (tid, seg) -> recorded owner of each frame-resume entry
+        self._resume_owner: Dict[Tuple[int, int], int] = {
+            (e.tid, e.seg): w
+            for w, order in enumerate(self._orders)
+            for e in order if isinstance(e, FrameResume)}
 
         self._worker_cvs = [threading.Condition() for _ in range(n)]
         self._waiting = [False] * n          # worker w is parked on its cv
@@ -91,6 +120,18 @@ class ReplayDispatch(DispatchStrategy):
         self._results: List[Any] = []
         self._regions: Dict[int, GangRegion] = {}
         self._issue_cursor = 0
+        # suspendable frames of the current run: tid -> live frame, plus the
+        # parked subset (waiting on a channel/event) for abort draining
+        self._frames: Dict[int, TaskFrame] = {}
+        self._parked: Dict[int, TaskFrame] = {}
+        self._park_lock = threading.Lock()
+        # serializes the resumable test-and-clear so the recorded owner and
+        # a fallback helper can never both take one wakeup
+        self._frame_gate = threading.Lock()
+        # no-progress detection (mirrors DynamicDispatch): per-worker unit
+        # depth + "top of stack blocked in plain-body recv/wait" flags
+        self._depth = [0] * n
+        self._stalled = [False] * n
 
         self.stats: Dict[str, int] = {}
         self.issued_gang_ids: List[int] = []
@@ -115,9 +156,15 @@ class ReplayDispatch(DispatchStrategy):
         self._results = [None] * n
         self._regions = {}
         self._issue_cursor = 0
+        self.drain_frames()                  # cancel a prior aborted run's
+        for frame in self._frames.values():  # parked frames; close woken-
+            frame.close()                    # but-never-resumed ones (no-op
+        self._frames = {}                    # for completed generators)
         self._waiting = [False] * self.n_workers
+        self._depth = [0] * self.n_workers
+        self._stalled = [False] * self.n_workers
         self.stats = {"fallback_steals": 0, "stalls": 0, "skips": 0,
-                      "run_ahead": 0}
+                      "run_ahead": 0, "frame_suspends": 0}
         self.issued_gang_ids = []
 
     @property
@@ -136,9 +183,10 @@ class ReplayDispatch(DispatchStrategy):
                 cv.notify_all()
         with self._fork_cv:
             self._fork_cv.notify_all()
+        # non-blocking: the caller may hold a region cv (a barrier waiter
+        # runs the deadlock detector inside `with region.cv`)
         for region in list(self._regions.values()):
-            with region.cv:
-                region.cv.notify_all()
+            region.notify_nowait()
 
     # ------------------------------------------------------------------
     # worker loop
@@ -154,6 +202,8 @@ class ReplayDispatch(DispatchStrategy):
             entry = order[idx]
             if isinstance(entry, int):
                 advanced = self._try_task(w, entry)
+            elif isinstance(entry, FrameResume):
+                advanced = self._try_resume(w, entry)
             else:
                 advanced = self._try_gang(w, entry)
             if advanced:
@@ -222,6 +272,12 @@ class ReplayDispatch(DispatchStrategy):
         state is written before the cv is taken, so no wakeup is missed)."""
         if isinstance(entry, int):
             return self._ready[entry] or entry in self._claims
+        if isinstance(entry, FrameResume):
+            if self._done[entry.tid] or (entry.tid, entry.seg) in self._claims:
+                return True
+            frame = self._frames.get(entry.tid)
+            return (frame is not None and frame.resumable
+                    and frame.resumes == entry.seg - 1)
         return entry[0] in self._regions or self._done[entry[0]]
 
     def _try_task(self, w: int, tid: int) -> bool:
@@ -237,6 +293,28 @@ class ReplayDispatch(DispatchStrategy):
         if self._claims.setdefault(tid, w) != w:
             return True
         self._execute(w, self._graph.tasks[tid])
+        return True
+
+    def _try_resume(self, w: int, entry: FrameResume) -> bool:
+        """Attempt the next recorded frame-resume segment.  True => advance
+        the list (executed here, already executed elsewhere, or stale)."""
+        tid, seg = entry.tid, entry.seg
+        key = (tid, seg)
+        if key in self._claims:
+            if not self._done[tid]:
+                self.stats["skips"] += 1     # a fallback helper took our slot
+            return True
+        if self._done[tid]:
+            return True                      # frame already ran to completion
+        frame = self._frames.get(tid)
+        if frame is None:
+            return False                     # task not started yet
+        if frame.resumes >= seg:
+            return True                      # a fallback helper raced past us
+        if not self._take_resumable(frame, seg):
+            return False                     # wakeup not arrived yet
+        self._claims.setdefault(key, w)
+        self._resume_segment(w, frame)
         return True
 
     def _try_gang(self, w: int, entry: Tuple[int, int]) -> bool:
@@ -266,6 +344,19 @@ class ReplayDispatch(DispatchStrategy):
                 self._run_ult(w, region, i)
                 self.stats["fallback_steals"] += 1
                 return True
+        # resumable frames gate their successors like barriers do — serve
+        # them even off their recorded slot (per-segment claims keep each
+        # segment single-shot; the recorded owner just skips it)
+        for tid, frame in list(self._frames.items()):
+            if self._done[tid] or not frame.resumable:
+                continue
+            seg = frame.resumes + 1
+            if not self._take_resumable(frame, seg):
+                continue
+            self._claims.setdefault((tid, seg), w)
+            self._resume_segment(w, frame)
+            self.stats["fallback_steals"] += 1
+            return True
         for tid in range(self._n_tasks):
             if self._ready[tid] and tid not in self._claims:
                 if tid in self._placements:
@@ -291,9 +382,174 @@ class ReplayDispatch(DispatchStrategy):
     def _execute(self, w: int, task: Task) -> None:
         ctx = TaskContext(self._graph, task, self._results, runtime=self)
         ctx.worker_id = w  # type: ignore[attr-defined]
-        result = task.fn(ctx) if task.fn is not None else None
+        self._depth[w] += 1
+        try:
+            result = task.fn(ctx) if task.fn is not None else None
+            if isinstance(result, GeneratorType):
+                # generator body => suspendable frame.  Replay always
+                # suspends at yield points (even with data available) so the
+                # recorded segmentation — and the interleaving — is
+                # reproduced.
+                ctx._in_frame = True
+                frame = TaskFrame(task, ctx, result)
+                frame.last_worker = w
+                self._frames[task.tid] = frame
+                self._advance_frame(w, frame)
+                return
+        finally:
+            self._depth[w] -= 1
         self._results[task.tid] = result
         self._complete(w, task)
+
+    # ------------------------------------------------------------------
+    # suspendable frames
+    def _take_resumable(self, frame: TaskFrame, seg: int) -> bool:
+        """Atomically consume the frame's wakeup for segment ``seg`` (the
+        recorded owner and fallback helpers race here; exactly one wins)."""
+        with self._frame_gate:
+            if not frame.resumable or frame.resumes != seg - 1:
+                return False
+            frame.resumable = False
+            return True
+
+    def _resume_segment(self, w: int, frame: TaskFrame) -> None:
+        frame.resumes += 1
+        frame.ctx.worker_id = w  # type: ignore[attr-defined]
+        frame.last_worker = w
+        self._depth[w] += 1
+        try:
+            self._advance_frame(w, frame)
+        finally:
+            self._depth[w] -= 1
+
+    def _advance_frame(self, w: int, frame: TaskFrame) -> None:
+        value = frame.resume_value
+        frame.resume_value = None
+        status, payload = frame.step(value)
+        if status == "done":
+            self._results[frame.task.tid] = payload
+            self._complete(w, frame.task)
+            return
+        self._park_frame(w, frame, payload)
+
+    def _park_frame(self, w: int, frame: TaskFrame, request) -> None:
+        core = self.core
+        tid = frame.task.tid
+
+        def waker(value=None, *, _frame=frame):
+            self._wake_frame(_frame, value)
+
+        frame.request = request
+        frame.waker = waker
+        with self._park_lock:
+            self._parked[tid] = frame
+        note_parked(frame)
+        core.note_frame_suspended()
+        self.stats["frame_suspends"] += 1
+        status, value = request.park(waker)
+        if status == "ready":
+            waker(value)
+        elif core.aborted:
+            self._discard_parked(frame)
+
+    def _wake_frame(self, frame: TaskFrame, value: Any) -> None:
+        """Waker target: mark the frame resumable and nudge the recorded
+        owner of its next resume segment."""
+        tid = frame.task.tid
+        with self._park_lock:
+            if self._parked.pop(tid, None) is None:
+                return
+        note_unparked(frame)
+        frame.resume_value = value
+        frame.request = None
+        frame.waker = None
+        with self._frame_gate:
+            frame.resumable = True
+        self.core.note_frame_resumed()
+        owner = self._resume_owner.get((tid, frame.resumes + 1))
+        if owner == self.core.worker_id(default=-1):
+            return     # waking ourselves (send landed while we parked): we
+                       # are awake and will hit the resume entry on our walk
+        targets = range(self.n_workers) if owner is None else (owner,)
+        for t in targets:
+            cv = self._worker_cvs[t]
+            with cv:
+                cv.notify_all()
+
+    def _discard_parked(self, frame: TaskFrame) -> None:
+        with self._park_lock:
+            if self._parked.pop(frame.task.tid, None) is None:
+                return
+        note_unparked(frame)
+        if frame.request is not None:
+            frame.request.cancel(frame.waker)
+        self.core.note_frame_resumed()
+        frame.close()
+
+    def drain_frames(self) -> None:
+        with self._park_lock:
+            frames = list(self._parked.values())
+        for frame in frames:
+            self._discard_parked(frame)
+
+    # ------------------------------------------------------------------
+    # plain-body blocking communication (mirrors DynamicDispatch semantics:
+    # the worker helps through the fallback path instead of idling)
+    def ctx_recv(self, channel: Channel, ctx: TaskContext) -> Any:
+        return self._blocking_wait(channel.try_recv)
+
+    def ctx_wait(self, event: TaskEvent, ctx: TaskContext) -> None:
+        self._blocking_wait(
+            lambda: ((True, None) if event.is_set() else (False, None)))
+
+    def ctx_yield(self, ctx: TaskContext) -> None:
+        self._fallback_once(self.core.worker_id())
+
+    def _blocking_wait(self, poll) -> Any:
+        core = self.core
+        w = core.worker_id()
+        while True:
+            ok, value = poll()
+            if ok:
+                return value
+            if core.aborted:
+                raise DeadlockError(core.abort_reason())
+            if self._fallback_once(w):
+                continue
+            self._stalled[w] = True
+            try:
+                time.sleep(self.stall_timeout)
+                ok, value = poll()
+                if ok:
+                    return value
+                self._check_no_progress()
+            finally:
+                self._stalled[w] = False
+
+    def _active_workers(self) -> int:
+        return sum(1 for w in range(self.n_workers)
+                   if self._depth[w] > 0 and not self._stalled[w])
+
+    def _check_no_progress(self) -> None:
+        """A plain-body recv/wait no remaining replay work can satisfy:
+        nothing executing freely, no completion and no wakeup across a
+        confirmation window (completed-count is the progress proxy — any
+        runnable run-list entry gets executed by its owner or a fallback
+        helper well within ``block_poll``)."""
+        core = self.core
+        if self.drained or core.aborted or self._active_workers() > 0:
+            return
+        before = (len(self._completed), core.resume_epoch, activity_epoch())
+        time.sleep(core.block_poll)
+        if (not self.drained and not core.aborted
+                and self._active_workers() == 0
+                and sum(self._stalled) > 0
+                and (len(self._completed), core.resume_epoch,
+                     activity_epoch()) == before):
+            core.frame_deadlock(
+                f"deadlock: {sum(self._stalled)} worker(s) blocked in "
+                "task-body recv/wait during replay with no progress left "
+                "in the run")
 
     def _complete(self, w: int, task: Task) -> None:
         self._done[task.tid] = True
@@ -324,7 +580,11 @@ class ReplayDispatch(DispatchStrategy):
                     cv.notify_all()
 
     def _run_ult(self, w: int, region: GangRegion, thread_num: int) -> None:
-        result = region.body(thread_num, region)
+        self._depth[w] += 1
+        try:
+            result = region.body(thread_num, region)
+        finally:
+            self._depth[w] -= 1
         region.thread_done(thread_num, result)
 
     # ------------------------------------------------------------------

@@ -4,9 +4,11 @@ substrate: LU, QR (gang-scheduled multithreaded panels) and Cholesky
 
 from .cholesky import (build_cholesky_graph, cholesky_extract,
                        cholesky_graph_key, random_spd, reference_cholesky)
-from .lu import build_lu_graph, lu_extract, lu_graph_key, random_diagdom
-from .qr import build_qr_graph, qr_extract_r, qr_graph_key, qr_reconstruct
-from .tiles import CostModel, TileStore, to_tiles
+from .lu import (build_lu_graph, lu_extract, lu_graph_key,
+                 lu_static_recording, random_diagdom)
+from .qr import (build_qr_graph, qr_extract_r, qr_graph_key, qr_reconstruct,
+                 qr_static_recording)
+from .tiles import CostModel, ShapeOnlyStore, TileStore, to_tiles
 
 GRAPH_KEYS = {
     "cholesky": cholesky_graph_key,
@@ -37,12 +39,15 @@ __all__ = [
     "build_qr_graph",
     "cholesky_extract",
     "cholesky_graph_key",
+    "ShapeOnlyStore",
     "lu_extract",
     "lu_graph_key",
+    "lu_static_recording",
     "paper_graph",
     "qr_graph_key",
     "qr_extract_r",
     "qr_reconstruct",
+    "qr_static_recording",
     "random_diagdom",
     "random_spd",
     "reference_cholesky",

@@ -23,7 +23,13 @@ import numpy as np
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import lu_panel_region
-from .tiles import CostModel, TileStore, tile_gemm_nn_sub, tile_trsm_left_lower_unit
+from .tiles import (
+    CostModel,
+    ShapeOnlyStore,
+    TileStore,
+    tile_gemm_nn_sub,
+    tile_trsm_left_lower_unit,
+)
 
 
 def build_lu_graph(
@@ -133,6 +139,38 @@ def lu_graph_key(
     from ..replay import graph_key
     return graph_key(build_lu_graph(nb, b, cost=cost, ranks=ranks,
                                     panel_threads=panel_threads, comm=comm))
+
+
+def lu_static_recording(
+    nb: int,
+    b: int = 64,
+    *,
+    n_workers: int,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    comm: bool = True,
+    policy: str = "hybrid",
+    seed: int = 0,
+):
+    """Synthesize a replay :class:`~repro.replay.Recording` for the
+    **numeric** LU graph from the simulator: the cost-model twin (same
+    structure, :class:`ParallelSpec` panels) is list-scheduled at
+    ``n_workers``, its gang reservations become recorded placements (panel
+    forks replay *placed*, not via dynamic fallback), and the recording is
+    keyed to the numeric build's digest so numeric sweeps replay it
+    directly."""
+    from ..core.static_schedule import ListScheduler
+    from ..replay.graph_key import graph_key
+    from ..replay.recording import Recording
+
+    kwargs = dict(cost=cost, ranks=ranks, panel_threads=panel_threads,
+                  comm=comm)
+    twin = build_lu_graph(nb, b, **kwargs)
+    sched = ListScheduler(n_workers, policy=policy, seed=seed).schedule(twin)
+    numeric_key = graph_key(
+        build_lu_graph(nb, b, store=ShapeOnlyStore(nb, b), **kwargs))
+    return Recording.from_static_schedule(sched, twin, key=numeric_key)
 
 
 def lu_extract(store: TileStore):

@@ -19,7 +19,7 @@ import numpy as np
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import qr_form_t, qr_panel_region
-from .tiles import CostModel, TileStore
+from .tiles import CostModel, ShapeOnlyStore, TileStore
 
 
 def build_qr_graph(
@@ -134,6 +134,34 @@ def qr_graph_key(
     from ..replay import graph_key
     return graph_key(build_qr_graph(nb, b, cost=cost, ranks=ranks,
                                     panel_threads=panel_threads, comm=comm))
+
+
+def qr_static_recording(
+    nb: int,
+    b: int = 64,
+    *,
+    n_workers: int,
+    cost: Optional[CostModel] = None,
+    ranks: int = 4,
+    panel_threads: int = 4,
+    comm: bool = True,
+    policy: str = "hybrid",
+    seed: int = 0,
+):
+    """QR analogue of :func:`repro.linalg.lu.lu_static_recording`: simulate
+    the cost-model twin, carry its gang reservations into the recording as
+    placements, key it to the numeric build's digest."""
+    from ..core.static_schedule import ListScheduler
+    from ..replay.graph_key import graph_key
+    from ..replay.recording import Recording
+
+    kwargs = dict(cost=cost, ranks=ranks, panel_threads=panel_threads,
+                  comm=comm)
+    twin = build_qr_graph(nb, b, **kwargs)
+    sched = ListScheduler(n_workers, policy=policy, seed=seed).schedule(twin)
+    numeric_key = graph_key(
+        build_qr_graph(nb, b, store=ShapeOnlyStore(nb, b), **kwargs))
+    return Recording.from_static_schedule(sched, twin, key=numeric_key)
 
 
 def qr_extract_r(store: TileStore) -> jnp.ndarray:

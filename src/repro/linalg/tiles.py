@@ -35,6 +35,18 @@ class TileStore:
         return jnp.concatenate(rows, axis=0)
 
 
+class ShapeOnlyStore:
+    """Stand-in for a :class:`TileStore` carrying only ``(nb, b)``.  Task
+    bodies never run against it — it exists so the *numeric* variant of a
+    factorization graph can be built purely for its structural
+    :func:`~repro.replay.graph_key` (numeric and cost-model builds differ
+    structurally)."""
+
+    def __init__(self, nb: int, b: int):
+        self.nb = nb
+        self.b = b
+
+
 def to_tiles(a: jnp.ndarray, b: int) -> TileStore:
     n = a.shape[0]
     if a.shape[0] != a.shape[1] or n % b != 0:

@@ -13,8 +13,15 @@ ignores callables), the whole decode loop replays from one recording via the
 State lives in a mutable :class:`DecodeState` (the serving analogue of the
 tile stores the factorization graphs close over): each shard owns its KV
 cache and current token, task bodies read/write their own shard, and the
-dependency edges order every access — replay is bit-identical to dynamic
-execution regardless of interleaving.
+dependency/channel edges order every access — replay is bit-identical to
+dynamic execution regardless of interleaving.
+
+The gather join is a *suspendable frame* over a
+:class:`~repro.core.taskgraph.Channel`: each shard's sample task ``send``\\ s
+its token as soon as it is drawn, and the gather generator ``recv``\\ s them
+one by one — overlapping the join's assembly with the remaining shards'
+decode/sample instead of barriering on all of them (and never pinning a
+worker while it waits; the frame suspends).
 """
 
 from __future__ import annotations
@@ -22,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
-from ..core.taskgraph import TaskGraph
+from ..core.taskgraph import Channel, TaskGraph
 
 # decode_fn(params, cache, tok) -> (new_cache, logits); sample_fn(logits) -> tok
 DecodeFn = Callable[[Any, Any, Any], Any]
@@ -74,13 +81,15 @@ def build_decode_graph(
     decode_fn: DecodeFn,
     sample_fn: Optional[SampleFn] = None,
 ) -> TaskGraph:
-    """One decode step over ``state``: per shard ``decode -> sample``, then a
-    ``gather`` join.  Rebuilding per step yields an identical
-    :func:`~repro.replay.graph_key` digest, so a :class:`~repro.replay.ReplayPool`
-    records step 1 and replays every later step."""
+    """One decode step over ``state``: per shard ``decode -> sample``, plus a
+    ``gather`` frame receiving each shard's token over a
+    :class:`~repro.core.taskgraph.Channel` as it is sampled.  Rebuilding per
+    step yields an identical :func:`~repro.replay.graph_key` digest, so a
+    :class:`~repro.replay.ReplayPool` records step 1 (including the gather
+    frame's suspension points) and replays every later step."""
     sample = sample_fn or greedy_sample
     g = TaskGraph(f"decode_step[{state.n_shards}]")
-    samples = []
+    tokens = Channel("decode.tokens")
     for s in range(state.n_shards):
         def _decode(ctx, s=s):
             sh = state.shards[s]
@@ -91,21 +100,28 @@ def build_decode_graph(
         def _sample(ctx, s=s):
             sh = state.shards[s]
             sh.tok = sample(sh.logits)
+            tokens.send((s, sh.tok))
             return sh.tok
 
-        samples.append(
-            g.add(_sample, deps=[dec], name=f"sample{s}", kind="compute",
-                  cost=0.1))
+        g.add(_sample, deps=[dec], name=f"sample{s}", kind="compute",
+              cost=0.1)
+
+    n_shards = state.n_shards
 
     def _gather(ctx):
+        # suspendable frame: assemble tokens as they stream in, suspending
+        # (worker-free) between arrivals instead of barriering on all shards
         import jax.numpy as jnp
 
-        toks = [state.shards[s].tok for s in range(state.n_shards)]
+        toks: List[Any] = [None] * n_shards
+        for _ in range(n_shards):
+            s, tok = yield ctx.recv(tokens)
+            toks[s] = tok
         state.step_tokens = jnp.concatenate(toks, axis=0)
         state.history.append(state.step_tokens)
         return state.step_tokens
 
-    g.add(_gather, deps=samples, name="gather", kind="comm", cost=0.05)
+    g.add(_gather, name="gather", kind="comm", cost=0.05)
     return g
 
 

@@ -26,9 +26,11 @@ idea):
   unified executor core (:mod:`repro.exec`) — pass ``core=`` to lease warm
   workers shared with other executors;
 * :class:`ReplayPool` — persistent per-``(GraphKey, n_workers, policy)``
-  leases over one shared worker core per worker count, for steady-state
-  serving loops: adaptive re-recording on sustained plan deviation or
-  wall-clock regression (``latency_drift_factor``), LRU shape eviction
+  leases over one shared worker core per worker count — leased from the
+  process-global :class:`~repro.exec.registry.CoreRegistry` by default, so
+  several pools in one process share threads — for steady-state serving
+  loops: adaptive re-recording on sustained plan deviation or wall-clock
+  regression (``latency_drift_factor``), LRU shape eviction
   (``max_shapes``), and worker-count remapping (:func:`remap_recording`)
   of recordings shipped at a different worker count.
 
@@ -42,6 +44,14 @@ executor still requires a 1:1 task-id cover).  Replay preserves execution
 *semantics*, not timing: task results are bit-identical to a dynamic run
 because the dependency edges — not the recorded interleaving — gate every
 task, and tile-store writes are ordered by those same edges.
+
+Suspendable frames replay deterministically: a recorded run stores every
+frame suspension as a :class:`~repro.core.taskgraph.FrameResume` run-list
+entry (recording forces a suspension at each ``yield``), and replay
+re-suspends at the same points — reproducing the recorded frame
+interleaving bit-identically, with per-segment claims keeping fallback
+helpers single-shot.  Worker-count remapping keeps a frame's resume entries
+adjacent to its start entry on one list.
 
 Deviation limits: when real costs drift from the recorded ones, a worker
 whose next recorded entry is not ready within ``stall_timeout`` falls back

@@ -65,6 +65,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from ..core.taskgraph import TaskGraph
 from ..exec.core import ExecutorCore
+from ..exec.registry import release_shared_core, shared_core
 from .cache import GraphCache, cache_key
 from .executor import ReplayExecutor
 from .graph_key import GraphKey, graph_key
@@ -145,6 +146,12 @@ class ReplayPool:
         lease released.  ``None`` (default) keeps every shape.
     stall_timeout:
         Forwarded to each :class:`ReplayExecutor`.
+    shared_cores:
+        Lease worker cores from the process-global
+        :class:`~repro.exec.registry.CoreRegistry` (default): several pools
+        in one process share one core per worker count, so total threads
+        are capped across tenants.  ``False`` gives this pool private
+        cores (the pre-registry behavior — full isolation).
     """
 
     def __init__(
@@ -159,6 +166,7 @@ class ReplayPool:
         warmup_runs: int = 1,
         max_shapes: Optional[int] = None,
         stall_timeout: float = 1e-3,
+        shared_cores: bool = True,
     ):
         if max_shapes is not None and max_shapes < 1:
             raise ValueError("max_shapes must be >= 1 (or None for no cap)")
@@ -171,6 +179,7 @@ class ReplayPool:
         self.warmup_runs = warmup_runs
         self.max_shapes = max_shapes
         self.stall_timeout = stall_timeout
+        self.shared_cores = shared_cores
         self.last_recording: Optional[Recording] = None
         self.evictions = 0
 
@@ -196,7 +205,10 @@ class ReplayPool:
         for entry in entries:
             self._release_entry(entry)
         for core in cores:
-            core.shutdown()
+            if self.shared_cores:
+                release_shared_core(core)   # last lessee stops the threads
+            else:
+                core.shutdown()
 
     def _release_entry(self, entry: _PoolEntry) -> None:
         """Shut an evicted/closed entry's lease down cleanly: waits for any
@@ -220,17 +232,22 @@ class ReplayPool:
     # ------------------------------------------------------------------
     # shared worker substrate
     def _core_for(self, n_workers: int) -> ExecutorCore:
-        """The pool-wide warm core for this worker count (started lazily).
-        Every shape at this count — and its warmup/recording dynamic runs —
-        leases these same threads."""
+        """The warm core for this worker count (leased lazily).  Every shape
+        at this count — and its warmup/recording dynamic runs — shares these
+        threads; with ``shared_cores`` (default) the lease comes from the
+        process-global registry, so other pools share them too."""
         with self._lock:
             if self._closed:
                 raise RuntimeError("ReplayPool is shut down")
             core = self._cores.get(n_workers)
             if core is None:
-                core = self._cores[n_workers] = ExecutorCore(
-                    n_workers, name=f"pool{n_workers}-worker")
-                core.start()
+                if self.shared_cores:
+                    core = shared_core(n_workers)
+                else:
+                    core = ExecutorCore(
+                        n_workers, name=f"pool{n_workers}-worker")
+                    core.start()
+                self._cores[n_workers] = core
             return core
 
     # ------------------------------------------------------------------

@@ -4,8 +4,11 @@ A :class:`Recording` captures everything the replay executor needs to re-run
 a graph of the same shape without making any scheduling decisions:
 
 * ``worker_orders`` — for each worker, the entries it executed in start
-  order.  An entry is a task id (``int``) or a gang ULT
-  ``(spawn_tid, thread_num)`` pair (stored as a 2-list in JSON);
+  order.  An entry is a task id (``int``), a gang ULT
+  ``(spawn_tid, thread_num)`` pair (stored as a 2-list in JSON), or a
+  :class:`~repro.core.taskgraph.FrameResume` — resume segment ``seg`` of a
+  suspended task frame (stored as ``["r", tid, seg]``), which is what lets
+  replay reproduce a run's frame interleaving bit-identically;
 * ``gang_placements`` — for each region-forking task, the recorded gang id
   and the worker that ran each ULT (index = ``thread_num``);
 * ``gang_issue_order`` — spawn-task ids in fork (gang-id) order: the
@@ -28,11 +31,12 @@ import json
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 from ..core.static_schedule import StaticSchedule
-from ..core.taskgraph import TaskGraph
+from ..core.taskgraph import FrameResume, TaskGraph
 from .graph_key import GraphKey, graph_key
 
-# an executed unit: a task id, or (spawn_tid, thread_num) for a gang ULT
-Entry = Union[int, Tuple[int, int]]
+# an executed unit: a task id, (spawn_tid, thread_num) for a gang ULT, or
+# FrameResume(tid, seg) for a suspended frame's resume segment
+Entry = Union[int, Tuple[int, int], FrameResume]
 
 
 @dataclasses.dataclass
@@ -80,10 +84,13 @@ class Recording:
                     f"recording is for graph {self.graph_name!r} "
                     f"(digest {self.digest[:16]}) but got {key}")
         seen: Dict[int, int] = {}
+        resumes: Dict[Tuple[int, int], int] = {}
         for order in self.worker_orders:
             for e in order:
                 if isinstance(e, int):
                     seen[e] = seen.get(e, 0) + 1
+                elif isinstance(e, FrameResume):
+                    resumes[(e.tid, e.seg)] = resumes.get((e.tid, e.seg), 0) + 1
         n = len(graph)
         missing = [t for t in range(n) if seen.get(t, 0) != 1]
         extra = [t for t in seen if t >= n]
@@ -91,12 +98,22 @@ class Recording:
             raise RecordingError(
                 "recording does not cover graph 1:1 "
                 f"(bad/missing tids {missing[:8]}, out-of-range {extra[:8]})")
+        bad_resumes = [k for k, c in resumes.items()
+                       if c != 1 or k[0] >= n or k[1] < 1]
+        if bad_resumes:
+            raise RecordingError(
+                f"bad frame-resume entries {bad_resumes[:8]} (each (tid, seg) "
+                "must appear once, for an in-range task, with seg >= 1)")
 
     # ------------------------------------------------------------------
     # serialization (plain data; gang entries become 2-lists)
     def to_dict(self) -> Dict[str, Any]:
         def enc(e: Entry):
-            return e if isinstance(e, int) else [int(e[0]), int(e[1])]
+            if isinstance(e, int):
+                return e
+            if isinstance(e, FrameResume):
+                return ["r", int(e.tid), int(e.seg)]
+            return [int(e[0]), int(e[1])]
         return {
             "digest": self.digest,
             "graph_name": self.graph_name,
@@ -116,7 +133,11 @@ class Recording:
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Recording":
         def dec(e) -> Entry:
-            return e if isinstance(e, int) else (int(e[0]), int(e[1]))
+            if isinstance(e, int):
+                return e
+            if len(e) == 3 and e[0] == "r":
+                return FrameResume(int(e[1]), int(e[2]))
+            return (int(e[0]), int(e[1]))
         return cls(
             digest=d["digest"],
             graph_name=d.get("graph_name", ""),
@@ -147,12 +168,22 @@ class Recording:
         sched: StaticSchedule,
         graph: TaskGraph,
         key: Optional[GraphKey] = None,
+        *,
+        gangs: bool = True,
     ) -> "Recording":
         """Seed a recording from a frozen :class:`StaticSchedule`: slot i's
         item order (by frozen start time) becomes worker i's run list, and
-        the schedule's collective total order is carried over.  Gang
-        placements are empty — region-forking tasks replayed from a static
-        seed are served by the executor's dynamic fallback."""
+        the schedule's collective total order is carried over.
+
+        With ``gangs`` (default) the simulator's gang reservations
+        (``sched.gangs``) are synthesized into recorded placements: each
+        region-forking task gets a :class:`GangPlacement` on the reserved
+        slots, its ULT entries are inserted into those slots' run lists at
+        the fork's virtual time, and the fork order becomes the recording's
+        monotonic gang-id issue order — so e.g. numeric LU/QR panel forks
+        replay *placed* instead of hitting the dynamic fallback.  Pass
+        ``key`` explicitly when the recording should drive a same-shaped
+        twin of ``graph`` (the numeric build of a cost-model schedule)."""
         if key is None:
             key = graph_key(graph)
         # (slot, sort-key, end-time) per scheduled task
@@ -177,16 +208,42 @@ class Recording:
                 place[t.tid] = (0, -1.0 + eps * t.tid, 0.0)
             else:
                 place[t.tid] = (best[1], best[2] + eps * (t.tid + 1), best[0])
+        rows: List[Tuple[int, float, int, Entry]] = [
+            (slot, seq, 0, tid) for tid, (slot, seq, _) in place.items()]
+
+        # gang reservations -> recorded placements + slot-ordered ULT entries
+        placements: Dict[int, GangPlacement] = {}
+        issue_order: List[int] = []
+        if gangs and sched.gangs:
+            import bisect
+
+            slot_starts: List[List[float]] = [[] for _ in range(sched.n_slots)]
+            for it in sched.items:
+                slot_starts[it.slot].append(it.t0)
+            for s in slot_starts:
+                s.sort()
+            for g in sorted(sched.gangs, key=lambda g: (g.t, g.gang_id)):
+                placements[g.spawn_tid] = GangPlacement(
+                    g.spawn_tid, g.gang_id, list(g.workers))
+                issue_order.append(g.spawn_tid)
+                for i, wk in enumerate(g.workers):
+                    # fractional seq: after every item starting at or before
+                    # the fork, before the next one (ULTs run right after
+                    # their fork on the reserved slot)
+                    seq = bisect.bisect_right(slot_starts[wk], g.t) - 0.5
+                    rows.append((wk, seq, 1, (g.spawn_tid, i)))
+
         orders: List[List[Entry]] = [[] for _ in range(sched.n_slots)]
-        for tid, (slot, seq, _) in sorted(place.items(),
-                                          key=lambda kv: (kv[1][0], kv[1][1])):
-            orders[slot].append(tid)
+        for slot, _, _, entry in sorted(rows, key=lambda r: (r[0], r[1], r[2])):
+            orders[slot].append(entry)
         return cls(
             digest=key.digest,
             graph_name=graph.name,
             n_workers=sched.n_slots,
             policy=sched.policy,
             worker_orders=orders,
+            gang_placements=placements,
+            gang_issue_order=issue_order,
             collective_order=sched.collective_order(),
             source="static",
         )

@@ -14,6 +14,11 @@ directly:
   list is *some* dependency-consistent start order degrades gracefully:
   cross-list inversions introduced by the fold are served by the executor's
   run-ahead window and dynamic fallback, never deadlock.
+* **frame adjacency** — a suspended frame's
+  :class:`~repro.core.taskgraph.FrameResume` entries are routed to the list
+  where the frame's *start* entry lands (its home list), and re-ordered
+  start-first / segments-ascending, so one worker owns a frame's whole
+  lifecycle after the remap.
 * **expansion rebalancing** — expanding to *more* workers would leave the
   extra workers with empty run lists (fallback-only helpers that idle
   through stall windows before stealing).  Instead, each empty worker is
@@ -39,6 +44,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+from ..core.taskgraph import FrameResume
 from .recording import Entry, GangPlacement, Recording, RecordingError
 
 
@@ -82,16 +88,29 @@ def remap_recording(rec: Recording, new_workers: int) -> Recording:
     # lists stably by (original position, old worker) — original position is
     # the recorded start-order proxy, so intra-worker order is preserved and
     # cross-list interleaving approximates the recorded global order.
+    # Frame-resume entries follow their frame's *home list* (wherever the
+    # task's start entry lands): a frame recorded as stolen across workers
+    # still keeps all of its segments adjacent to its start after the fold,
+    # so the remapped owner both starts and resumes it.
+    task_target: Dict[int, int] = {}
+    for ow, order in enumerate(rec.worker_orders):
+        for e in order:
+            if isinstance(e, int):
+                task_target[e] = ow % new_workers
     buckets: List[List[Tuple[int, int, Entry]]] = [[] for _ in range(new_workers)]
     for ow, order in enumerate(rec.worker_orders):
         for idx, e in enumerate(order):
             if isinstance(e, int):
                 target = ow % new_workers
+            elif isinstance(e, FrameResume):
+                target = task_target.get(e.tid, ow % new_workers)
             else:
                 target = gang_target.get((e[0], e[1]), ow % new_workers)
             buckets[target].append((idx, ow, e))
     orders = [[e for _, _, e in sorted(b, key=lambda t: (t[0], t[1]))]
               for b in buckets]
+    for order in orders:
+        _fix_frame_segment_order(order)
     if new_workers > old:
         _seed_expansion_workers(orders)
 
@@ -109,11 +128,33 @@ def remap_recording(rec: Recording, new_workers: int) -> Recording:
     )
 
 
+def _fix_frame_segment_order(order: List[Entry]) -> None:
+    """Restore each task's frame entries to causal order in place: start
+    entry first, then resume segments ascending.  A fold can interleave
+    source lists such that a stolen frame's segment 2 (recorded on another
+    worker, small list index) sorts before segment 1."""
+    positions: Dict[int, List[int]] = {}
+    for i, e in enumerate(order):
+        if isinstance(e, FrameResume):
+            positions.setdefault(e.tid, []).append(i)
+        elif isinstance(e, int):
+            positions.setdefault(e, []).append(i)
+    for tid, pos in positions.items():
+        if len(pos) < 2:
+            continue
+        entries = [order[i] for i in pos]
+        entries.sort(key=lambda e: 0 if isinstance(e, int) else e.seg)
+        for i, e in zip(pos, entries):
+            order[i] = e
+
+
 def _seed_expansion_workers(orders: List[List[Entry]]) -> None:
     """Seed each empty run list with the tail half of the longest list's
-    plain-task entries (in place).  Gang entries never move — their worker
-    is fixed by the (already repaired) placement; a donor with fewer than
-    two movable entries leaves the target as a fallback-only helper."""
+    plain-task entries (in place), pulling each moved task's frame-resume
+    entries along so a frame's segments stay on its home list.  Gang
+    entries never move — their worker is fixed by the (already repaired)
+    placement; a donor with fewer than two movable entries leaves the
+    target as a fallback-only helper."""
     for w, order in enumerate(orders):
         if order:
             continue
@@ -123,10 +164,14 @@ def _seed_expansion_workers(orders: List[List[Entry]]) -> None:
         if len(movable) < 2:
             continue
         tail = movable[len(movable) // 2:]
-        tail_set = set(tail)
-        orders[w] = [orders[donor][i] for i in tail]
+        moved_tids = {orders[donor][i] for i in tail}
+        move_set = set(tail) | {
+            i for i, e in enumerate(orders[donor])
+            if isinstance(e, FrameResume) and e.tid in moved_tids}
+        orders[w] = [orders[donor][i] for i in sorted(move_set)]
         orders[donor] = [e for i, e in enumerate(orders[donor])
-                         if i not in tail_set]
+                         if i not in move_set]
+        _fix_frame_segment_order(orders[w])
 
 
 def nearest_worker_count(available: List[int], wanted: int) -> int:

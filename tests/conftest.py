@@ -39,3 +39,22 @@ def _no_worker_thread_leaks():
     assert not leaked, (
         f"worker-thread leak: {len(leaked)} executor thread(s) still alive "
         f"after the suite: {sorted(leaked)}")
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _no_orphaned_frames():
+    """Assert no suspended task frame stays parked on a channel/event when
+    the suite ends — the frame analogue of the thread-leak check: an
+    aborted run must drain its parked frames, not orphan them."""
+    yield
+    from repro.core.taskgraph import live_parked_frames
+
+    deadline = time.monotonic() + 10.0
+    leaked = live_parked_frames()
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.05)
+        leaked = live_parked_frames()
+    assert not leaked, (
+        f"orphaned-frame leak: {len(leaked)} suspended frame(s) still "
+        f"parked after the suite: "
+        f"{sorted(f.task.name for f in leaked)}")

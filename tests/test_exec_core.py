@@ -102,7 +102,9 @@ def test_shared_core_rejects_mismatched_worker_count():
 def test_pool_shares_cores_across_shapes():
     """N shapes at one worker count lease ONE thread set — the pool caps
     threads by distinct worker counts, not by shapes."""
-    with ReplayPool(warmup_runs=0) as pool:
+    # shared_cores=False: this test pins down the PER-POOL core capping
+    # semantics (cross-pool registry sharing is covered in test_frames.py)
+    with ReplayPool(warmup_runs=0, shared_cores=False) as pool:
         for n in (5, 7, 9):
             for _ in range(2):
                 res = run_graph(_arith_graph(n), 2, pool=pool)
@@ -142,7 +144,7 @@ def test_pool_eviction_race_with_requests():
     shapes = {n: sum(i * 3 for i in range(n)) for n in (4, 6, 8)}
     errors = []
 
-    with ReplayPool(warmup_runs=0, max_shapes=1) as pool:
+    with ReplayPool(warmup_runs=0, max_shapes=1, shared_cores=False) as pool:
         def hammer(seed):
             try:
                 for round_ in range(6):
