@@ -3,12 +3,13 @@ release the GIL):
 
 * ``wallclock_overlap`` — hybrid vs history victim selection on an
   overlap-structured graph (comm sleeps hidden behind GEMM floods);
-* ``warm_reuse`` — dynamic scheduling on one persistent ``Runtime`` (warm
-  parked workers, the unified-executor-core path) vs a fresh
-  ``Runtime`` per run (thread spawn + queue allocation per request, the
+* ``warm_reuse`` — dynamic scheduling on one persistent ``Session`` (warm
+  leased workers, the unified-executor-core path) vs a fresh private-core
+  ``Session`` per run (thread spawn + queue allocation per request, the
   pre-refactor ``run_graph`` cost model).  The refactor's contract: warm
   dynamic scheduling is no slower than per-run-thread scheduling at every
-  worker count (``no_slower`` per row, asserted by the CI smoke job);
+  worker count (``no_slower`` per row, asserted by the CI smoke job and
+  gated against the committed noise floor by ``benchmarks.perf_gate``);
 * ``suspend_frames`` — fan-in communication (producers feeding consumers
   over a :class:`~repro.core.Channel`) with *blocking* plain-body consumers
   (each pins a worker work-conservingly) vs *suspendable* generator-frame
@@ -34,7 +35,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import Channel, Runtime, TaskGraph, run_graph
+import repro
+from repro.core import Channel, TaskGraph
 
 SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
@@ -85,9 +87,10 @@ def bench(workers: int = 4, repeats: int = 3) -> List[dict]:
         times = []
         for r in range(repeats):
             g = overlap_graph(steps, children, gemm, comm_s)
-            t0 = time.perf_counter()
-            run_graph(g, workers, policy=policy, seed=r, timeout=120.0)
-            times.append(time.perf_counter() - t0)
+            with repro.Session(workers, policy=policy, seed=r) as session:
+                t0 = time.perf_counter()
+                session.run(g, timeout=120.0)
+                times.append(time.perf_counter() - t0)
         best = min(times)
         rows.append({
             "bench": "wallclock_overlap", "policy": policy,
@@ -112,28 +115,27 @@ def reuse_graph(n_tasks: int = 48) -> TaskGraph:
 
 
 def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
-    """Best-of-``repeats`` mean per-run wall clock: a fresh Runtime per run
-    (per-run thread spawn — what every pre-refactor ``run_graph`` call
-    paid) vs one persistent Runtime serving every run on warm parked
-    workers."""
+    """Best-of-``repeats`` mean per-run wall clock: a fresh private-core
+    Session per run (per-run thread spawn — what every pre-refactor
+    ``run_graph`` call paid) vs one persistent Session serving every run
+    on warm leased workers."""
     graphs = [reuse_graph() for _ in range(iters)]
-    run_graph(graphs[0], workers)                     # warm imports/JIT paths
+    with repro.Session(workers) as s:
+        s.run(graphs[0])                              # warm imports/JIT paths
     fresh_times: List[float] = []
     warm_times: List[float] = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         for g in graphs:
-            rt = Runtime(workers)
-            with rt:
-                rt.run(g)
+            with repro.Session(workers, shared_cores=False) as session:
+                session.run(g)
         fresh_times.append((time.perf_counter() - t0) / iters)
-    rt = Runtime(workers)
-    with rt:
-        rt.run(graphs[0])                             # spawn outside the clock
+    with repro.Session(workers) as session:
+        session.run(graphs[0])                        # spawn outside the clock
         for _ in range(repeats):
             t0 = time.perf_counter()
             for g in graphs:
-                rt.run(g)
+                session.run(g)
             warm_times.append((time.perf_counter() - t0) / iters)
     fresh_best, warm_best = min(fresh_times), min(warm_times)
     return {
@@ -177,12 +179,16 @@ def bench_frames(workers: int, repeats: int = 3) -> Dict:
     n_pairs = 6 if SMOKE else 12
     work_s = 0.001 if SMOKE else 0.002
     samples: Dict[str, List[float]] = {"blocking": [], "suspend": []}
-    run_graph(frames_graph(n_pairs, True, work_s), workers)   # warm paths
+    with repro.Session(workers) as warm:
+        warm.run(frames_graph(n_pairs, True, work_s))         # warm paths
     for _ in range(repeats):
         for mode in ("blocking", "suspend"):
             g = frames_graph(n_pairs, mode == "suspend", work_s)
+            # per-request session, spawn included in the timed window —
+            # the serving-loop cost model this row has always measured
             t0 = time.perf_counter()
-            run_graph(g, workers, timeout=120.0)
+            with repro.Session(workers, shared_cores=False) as session:
+                session.run(g, timeout=120.0)
             samples[mode].append(time.perf_counter() - t0)
     blocking_best = min(samples["blocking"])
     suspend_best = min(samples["suspend"])

@@ -3,12 +3,12 @@
 Drives a tiny LM's decode-step task graph (repro.models.serving) exactly the
 way ``examples/serve_lm.py`` does, across worker counts:
 
-* ``dynamic`` — every request (decode step) goes through
-  ``run_graph(graph, workers)``: a fresh runtime per request, dynamic
-  scheduling.  This is the naive serving loop.
-* ``pooled``  — requests go through a persistent
-  :class:`~repro.replay.ReplayPool`: request 1 records, every later request
-  replays on warm executor threads.
+* ``dynamic`` — every request (decode step) goes through a
+  ``Session(scheduler="dynamic")``: per-request dynamic scheduling on warm
+  leased workers (a *tougher* baseline than the old fresh-runtime loop).
+* ``pooled``  — requests go through a ``Session(scheduler="pool")`` (a
+  persistent :class:`~repro.replay.ReplayPool` underneath): request 1
+  records, every later request replays on warm executor threads.
 
 Steady-state request latency excludes each mode's first request (compile /
 record warmup).  Correctness is asserted, not eyeballed: the pooled run's
@@ -109,15 +109,15 @@ def _decode_loop_pair(setup, run_a, run_b) -> tuple:
 
 
 def bench_workers(setup, workers: int) -> Dict:
-    from repro.core import run_graph
-    from repro.replay import ReplayPool
+    import repro
 
-    with ReplayPool() as pool:
+    with repro.Session(workers) as dyn, \
+            repro.Session(workers, scheduler="pool") as pooled:
         tok_dyn, lat_dyn, tok_pool, lat_pool = _decode_loop_pair(
             setup,
-            lambda g: run_graph(g, workers),
-            lambda g: run_graph(g, workers, pool=pool))
-        stats = next(iter(pool.describe().values()))
+            lambda g: dyn.run(g),
+            lambda g: pooled.run(g))
+        stats = next(iter(pooled.pool.describe().values()))
     identical = bool((tok_dyn == tok_pool).all())
     assert identical, f"pooled replay diverged from dynamic at {workers} workers"
     assert stats["records"] == 1 and stats["warmups"] == 1, stats
@@ -139,23 +139,25 @@ def bench_remap(setup, src_workers: int, dst_workers: int,
                 reference: np.ndarray) -> Dict:
     """Record at ``src_workers``, remap, replay the whole decode loop at
     ``dst_workers`` — token stream must match the dynamic reference."""
-    from repro.core import run_graph
-    from repro.replay import GraphCache, ReplayPool, remap_recording
+    import repro
+    from repro.replay import GraphCache, remap_recording
 
     cache = GraphCache()
-    with ReplayPool(cache) as pool:
-        _decode_loop(setup, lambda g: run_graph(g, src_workers, pool=pool))
+    reports: List = []
+    with repro.Session(src_workers, scheduler="pool", cache=cache) as src:
+        _decode_loop(setup, lambda g: reports.append(src.run(g)))
+    # the recording rides the RunReport — no pool.last_recording reach-in
     rec = next(iter(cache.candidates(
-        pool.last_recording.digest).values()))
+        reports[-1].recording.digest).values()))
     remapped = remap_recording(rec, dst_workers)
     cache.store(remapped)
 
     # a replica pool at the new worker count adopts the shipped recording:
     # no dynamic recording run happens (records stays 0)
-    with ReplayPool(cache, allow_remap=False) as replica:
-        tok, lat = _decode_loop(
-            setup, lambda g: run_graph(g, dst_workers, pool=replica))
-        stats = next(iter(replica.describe().values()))
+    with repro.Session(dst_workers, scheduler="pool", cache=cache,
+                       allow_remap=False) as replica:
+        tok, lat = _decode_loop(setup, lambda g: replica.run(g))
+        stats = next(iter(replica.pool.describe().values()))
     identical = bool((tok == reference).all())
     assert identical, f"remapped replay {src_workers}->{dst_workers} diverged"
     assert stats["records"] == 0, stats
@@ -168,11 +170,12 @@ def bench_remap(setup, src_workers: int, dst_workers: int,
 
 
 def bench() -> List[Dict]:
+    import repro
+
     setup = _setup()
     rows = [bench_workers(setup, w) for w in WORKERS]
-    from repro.core import run_graph
-
-    reference, _ = _decode_loop(setup, lambda g: run_graph(g, REMAP_FROM))
+    with repro.Session(REMAP_FROM) as session:
+        reference, _ = _decode_loop(setup, lambda g: session.run(g))
     for dst in (REMAP_FROM - 1, REMAP_FROM + 1):
         rows.append(bench_remap(setup, REMAP_FROM, dst, reference))
     return rows

@@ -1,0 +1,171 @@
+"""Perf-regression gate over ``bench_runtime`` rows (perf-gate step two).
+
+Step one (PR 4) made every ``bench_runtime`` row record its repeat spread
+(``noise = (max-min)/min``) and surfaced the per-run table in the CI job
+summary.  This module closes the loop:
+
+* ``benchmarks/noise_baseline.json`` (committed) accumulates the observed
+  spreads per row key — ``<bench>/w<workers>`` — across the last runs
+  (bounded window).  Maintainers refresh it with ``--accumulate`` from
+  local/CI artifacts; CI uploads a candidate updated baseline as an
+  artifact so the data keeps growing without CI pushing commits.
+* the **gate** checks every ``no_slower``-contract row against a threshold
+  derived from the *observed noise floor* instead of the old fixed 1.25x
+  headroom: a row fails when its contract ratio (``warm/fresh`` for
+  ``warm_reuse``, ``suspend/blocking`` for ``suspend_frames``) exceeds
+  ``1 + max(MIN_FLOOR, SAFETY * observed_max_spread)``.  A regression
+  bigger than anything machine noise has ever produced fails the job; one
+  inside the noise envelope passes.
+
+Usage::
+
+    python -m benchmarks.perf_gate BENCH_runtime.json \
+        [--baseline benchmarks/noise_baseline.json] \
+        [--accumulate] [--write-baseline PATH] [--summary]
+
+Exit code 1 on a gated regression (or malformed input); 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "noise_baseline.json")
+
+#: never gate tighter than this headroom, regardless of how quiet the
+#: baseline looks (a handful of lucky runs must not create a hair trigger)
+MIN_FLOOR = 0.25
+#: multiply the worst observed spread — the contract metric compares two
+#: measurements, each carrying its own noise
+SAFETY = 2.0
+#: spreads kept per row key (rolling window)
+WINDOW = 40
+
+# contract rows: bench -> (numerator column, denominator column)
+CONTRACTS: Dict[str, Tuple[str, str]] = {
+    "warm_reuse": ("warm_ms", "fresh_ms"),
+    "suspend_frames": ("suspend_ms", "blocking_ms"),
+}
+
+
+def row_key(row: Dict) -> str:
+    return f"{row['bench']}/w{row['workers']}"
+
+
+def load_baseline(path: str) -> Dict:
+    if not os.path.exists(path):
+        return {"rows": {}, "runs": 0}
+    with open(path) as fh:
+        base = json.load(fh)
+    base.setdefault("rows", {})
+    base.setdefault("runs", 0)
+    return base
+
+
+def accumulate(base: Dict, rows: List[Dict]) -> Dict:
+    """Fold this run's spreads into the baseline (rolling window)."""
+    for row in rows:
+        if "noise" not in row:
+            continue
+        entry = base["rows"].setdefault(row_key(row),
+                                        {"spreads": [], "count": 0})
+        entry["spreads"] = (entry["spreads"] + [row["noise"]])[-WINDOW:]
+        entry["count"] += 1
+    base["runs"] += 1
+    return base
+
+
+def floor_for(base: Dict, key: str) -> Tuple[float, int]:
+    """(relative headroom, samples) for a row key: the worst spread ever
+    observed for it (or across all keys when unseen), scaled by SAFETY and
+    clamped to MIN_FLOOR."""
+    entry = base["rows"].get(key)
+    if entry and entry["spreads"]:
+        spreads, n = entry["spreads"], entry["count"]
+    else:
+        spreads = [s for e in base["rows"].values() for s in e["spreads"]]
+        n = 0
+    worst = max(spreads) if spreads else 0.0
+    return max(MIN_FLOOR, SAFETY * worst), n
+
+
+def gate(rows: List[Dict], base: Dict) -> Tuple[List[str], List[str]]:
+    """Returns (failures, report lines)."""
+    failures: List[str] = []
+    lines = ["| row | ratio | allowed | observed spreads | verdict |",
+             "|---|---|---|---|---|"]
+    for row in rows:
+        contract = CONTRACTS.get(row["bench"])
+        if contract is None:
+            continue
+        num, den = contract
+        if not row.get(den):
+            failures.append(f"{row_key(row)}: missing/zero {den}")
+            continue
+        ratio = row[num] / row[den]
+        floor, samples = floor_for(base, row_key(row))
+        allowed = 1.0 + floor
+        ok = ratio <= allowed
+        lines.append(
+            f"| {row_key(row)} | {ratio:.3f} | <= {allowed:.3f} "
+            f"| {samples} runs | {'ok' if ok else '**REGRESSION**'} |")
+        if not ok:
+            failures.append(
+                f"{row_key(row)}: {num}/{den} = {ratio:.3f} exceeds "
+                f"1 + noise floor {floor:.3f} "
+                f"({samples} baseline runs)")
+    return failures, lines
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json", help="BENCH_runtime.json to gate")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--accumulate", action="store_true",
+                    help="fold this run's spreads into the baseline file")
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="write the (possibly accumulated) baseline here "
+                         "instead of in place")
+    ap.add_argument("--summary", action="store_true",
+                    help="append the gate table to $GITHUB_STEP_SUMMARY")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as fh:
+        bench = json.load(fh)
+    rows = bench.get("rows", [])
+    if not rows:
+        print(f"perf-gate: no rows in {args.bench_json}", file=sys.stderr)
+        return 1
+    base = load_baseline(args.baseline)
+    failures, lines = gate(rows, base)
+
+    out_path = args.write_baseline or args.baseline
+    if args.accumulate:
+        accumulate(base, rows)
+        with open(out_path, "w") as fh:
+            json.dump(base, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        lines.append(f"\nbaseline: {base['runs']} accumulated runs -> "
+                     f"{out_path}")
+
+    header = ("# perf gate (no_slower contracts vs observed noise floor)"
+              if not failures else
+              "# perf gate: REGRESSION beyond the observed noise floor")
+    text = "\n".join([header] + lines)
+    print(text)
+    for f in failures:
+        print(f"perf-gate FAIL: {f}", file=sys.stderr)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if args.summary and summary:
+        with open(summary, "a") as fh:
+            fh.write(text + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,9 @@
-"""Quickstart: the paper's scheduler in 60 lines.
+"""Quickstart: the paper's scheduler through the v2 session API.
 
-1. Build a task graph with a gang-scheduled nested parallel region.
-2. Run it on the threaded work-stealing runtime (Algorithms 1 & 2).
+1. Build a dataflow graph with futures (`Graph.add` returns TaskHandles;
+   dependencies are inferred from handle arguments) plus a gang-scheduled
+   nested parallel region.
+2. Run it in a `Session` and read results off the `RunReport`.
 3. Compare victim-selection policies on a paper-scale distributed Cholesky
    graph in the deterministic simulator.
 
@@ -12,14 +14,15 @@ import time
 
 import numpy as np
 
-from repro.core import Runtime, Simulator, TaskGraph
+import repro
+from repro.core import Simulator
 from repro.linalg.dist import build_dist_cholesky_graph
 from repro.linalg.tiles import CostModel
 
 
 def main():
-    # ---- 1/2: a graph with a gang region, executed for real ---------------
-    g = TaskGraph("demo")
+    # ---- 1/2: a dataflow graph with a gang region, executed for real ------
+    g = repro.Graph("demo")
 
     def panel_task(ctx):
         # a data-parallel panel with a blocking in-region barrier: the
@@ -32,15 +35,20 @@ def main():
         return sum(ctx.parallel(3, body, gang=True))
 
     p = g.add(panel_task, name="panel", kind="panel")
-    for i in range(6):
-        g.add(lambda ctx: np.random.rand(200, 200).sum(), deps=[p],
-              name=f"trail{i}")
+    trails = [g.add(lambda: np.random.rand(200, 200).sum(), deps=[p],
+                    name=f"trail{i}") for i in range(6)]
+    # futures as arguments: the reduce depends on every trail — inferred,
+    # no deps= needed — and receives their values
+    total = g.add(lambda xs: float(sum(xs)), trails, name="total")
 
-    with Runtime(4, policy="hybrid") as rt:
+    with repro.Session(workers=4, policy="hybrid") as session:
+        print(f"plan: {session.plan(g)}")
         t0 = time.perf_counter()
-        results = rt.run(g)
-        print(f"runtime: graph of {len(g)} tasks incl. gang region "
-              f"in {time.perf_counter() - t0:.3f}s; panel={results[p.tid]:.1f}")
+        report = session.run(g)
+        print(f"runtime: graph of {len(g)} tasks incl. gang region in "
+              f"{time.perf_counter() - t0:.3f}s; panel={report[p]:.1f} "
+              f"total={report[total]:.1f}")
+        print(f"report: {report.summary()}")
 
     # ---- 3: policy comparison at paper scale ------------------------------
     cm = CostModel(comm_bw=3e9, comm_latency=20e-6)

@@ -1,11 +1,12 @@
 """Record-and-replay: an iterative Cholesky sweep that stops paying for
-scheduling after its first step.
+scheduling after its first step — driven by the v2 session API.
 
-Step 1 runs the dynamic gang-scheduling runtime with recording on; every
-later step rebuilds the same-shaped graph over fresh tiles, hits the
-:class:`~repro.replay.GraphCache` on the structural key, and replays the
-recorded schedule with preallocated run lists — no victim selection, no
-indegree lock, no worker reservation.
+The session owns a `GraphCache`: step 1's plan says **record** (dynamic
+gang-scheduling run with instrumentation), every later step rebuilds the
+same-shaped graph over fresh tiles, plans as **replay**, and re-executes
+the recorded schedule with preallocated run lists — no victim selection,
+no indegree lock, no worker reservation.  The plan is inspectable data and
+the recording comes back on the `RunReport` (no `last_recording` global).
 
 Run:  PYTHONPATH=src python examples/replay_sweep.py
 """
@@ -14,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core import run_graph
+import repro
 from repro.linalg import (build_cholesky_graph, cholesky_extract,
                           cholesky_graph_key, random_spd, to_tiles)
 from repro.replay import GraphCache
@@ -25,22 +26,21 @@ NB, B, WORKERS, STEPS = 8, 64, 4, 6
 def main():
     cache = GraphCache()          # GraphCache(path="...") would persist
     print(f"cache key: {cholesky_graph_key(NB, B)}")
-    ref = None
-    for step in range(STEPS):
-        a = random_spd(NB * B, seed=step)
-        store = to_tiles(a, B)
-        graph = build_cholesky_graph(NB, B, store=store)
-        t0 = time.perf_counter()
-        run_graph(graph, WORKERS, cache=cache)   # records on miss, replays on hit
-        L = cholesky_extract(store)
-        L.block_until_ready()
-        dt = time.perf_counter() - t0
-        mode = "record" if step == 0 else "replay"
-        err = float(np.abs(np.asarray(L @ L.T) - np.asarray(a)).max())
-        print(f"step {step}: {mode:7s} {dt * 1e3:7.2f} ms   "
-              f"|LL^T - A|_max = {err:.2e}")
-        if ref is None:
-            ref = np.asarray(L)
+    with repro.Session(WORKERS, scheduler="replay", cache=cache) as session:
+        for step in range(STEPS):
+            a = random_spd(NB * B, seed=step)
+            store = to_tiles(a, B)
+            graph = build_cholesky_graph(NB, B, store=store)
+            plan = session.plan(graph)
+            t0 = time.perf_counter()
+            report = session.run(graph, plan=plan)
+            L = cholesky_extract(store)
+            L.block_until_ready()
+            dt = time.perf_counter() - t0
+            err = float(np.abs(np.asarray(L @ L.T) - np.asarray(a)).max())
+            print(f"step {step}: {plan.mode:7s} {dt * 1e3:7.2f} ms   "
+                  f"|LL^T - A|_max = {err:.2e}   "
+                  f"(recording: {'yes' if report.recording else 'no'})")
     print(f"\ncached recordings: {len(cache)} "
           f"(one per graph shape x worker-count x policy)")
 

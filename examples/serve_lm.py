@@ -5,10 +5,11 @@ decodes N tokens per request.  Three decode schedulers:
 
 * ``jit``     — the original monolithic jitted decode loop (no task graph);
 * ``dynamic`` — each decode step is a task graph (per-shard decode/sample
-  plus a gather join) executed by a fresh dynamic runtime per request;
-* ``pool``    — the same graphs served by a persistent
-  :class:`~repro.replay.ReplayPool`: step 1 records, every later step
-  replays on warm executor threads, drift triggers adaptive re-recording.
+  plus a gather join) executed by a ``Session(scheduler="dynamic")``;
+* ``pool``    — the same graphs served by a ``Session(scheduler="pool")``
+  (a persistent :class:`~repro.replay.ReplayPool` under the hood): step 1
+  records, every later step replays on warm executor threads, drift
+  triggers adaptive re-recording.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32 --scheduler pool
 """
@@ -19,11 +20,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs import get_config
-from repro.core import run_graph
 from repro.models import (build_decode_graph, decode_step, greedy_sample,
                           init_params, make_decode_state, prefill)
-from repro.replay import GraphCache, ReplayPool
+from repro.replay import GraphCache
 
 
 def main():
@@ -88,21 +89,21 @@ def main():
         state.step_tokens.block_until_ready()
         t_prefill = time.perf_counter() - t0
 
-        pool = None
-        if args.scheduler == "pool":
-            cache_store = GraphCache(args.cache_dir) if args.cache_dir else None
-            pool = ReplayPool(cache_store)
-        t0 = time.perf_counter()
-        for _ in range(args.tokens - 1):
-            g = build_decode_graph(state, decode_fn)
-            run_graph(g, args.workers, pool=pool)
-        state.step_tokens.block_until_ready()
-        t_decode = time.perf_counter() - t0
-        gen = state.tokens()
-        if pool is not None:
-            for ckey, stats in pool.describe().items():
-                print(f"pool[{ckey[:20]}…]: {stats}")
-            pool.shutdown()
+        cache_store = (GraphCache(args.cache_dir)
+                       if args.cache_dir and args.scheduler == "pool" else None)
+        session = repro.Session(args.workers, scheduler=args.scheduler,
+                                cache=cache_store)
+        with session:
+            t0 = time.perf_counter()
+            for _ in range(args.tokens - 1):
+                g = build_decode_graph(state, decode_fn)
+                session.run(g)
+            state.step_tokens.block_until_ready()
+            t_decode = time.perf_counter() - t0
+            gen = state.tokens()
+            if args.scheduler == "pool":
+                for ckey, stats in session.pool.describe().items():
+                    print(f"pool[{ckey[:20]}…]: {stats}")
 
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")

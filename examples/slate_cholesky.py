@@ -2,7 +2,9 @@
 
 Factors a real SPD matrix with the tiled task graph under each victim
 policy, validates the result, and reports wall-clock (JAX CPU tile kernels
-release the GIL, so work-stealing genuinely parallelizes).
+release the GIL, so work-stealing genuinely parallelizes).  One `Session`
+per policy: the policy name is validated up front and the run's steal
+statistics come back on the `RunReport`.
 
 Run:  PYTHONPATH=src python examples/slate_cholesky.py [n] [tile]
 """
@@ -12,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core import run_graph
+import repro
 from repro.linalg import build_cholesky_graph, cholesky_extract, random_spd, to_tiles
 
 
@@ -22,12 +24,14 @@ def main(n: int = 768, b: int = 96, workers: int = 4):
     for policy in ("history", "random", "hybrid"):
         store = to_tiles(a, b)
         g = build_cholesky_graph(store.nb, b, store=store)
-        t0 = time.perf_counter()
-        run_graph(g, workers, policy=policy, timeout=300.0)
-        dt = time.perf_counter() - t0
+        with repro.Session(workers, policy=policy) as session:
+            t0 = time.perf_counter()
+            report = session.run(g, timeout=300.0)
+            dt = time.perf_counter() - t0
         l = np.asarray(cholesky_extract(store))
         err = np.linalg.norm(l @ l.T - np.asarray(a)) / np.linalg.norm(np.asarray(a))
-        print(f"  {policy:8s}: {dt:6.3f}s   ||A - LL^T||/||A|| = {err:.2e}")
+        print(f"  {policy:8s}: {dt:6.3f}s   ||A - LL^T||/||A|| = {err:.2e}   "
+              f"steals={report.stats.get('steals', 0)}")
 
 
 if __name__ == "__main__":

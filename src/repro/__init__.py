@@ -1,0 +1,62 @@
+"""Task-graph scheduling extensions — reproduction package.
+
+Top-level exports are the **API v2** surface (:mod:`repro.api`): build
+graphs with :class:`Graph` (futures-based, dependencies inferred from
+:class:`TaskHandle` arguments), execute them through a :class:`Session`
+(scheduler selection + warm worker leasing), inspect decisions as
+:class:`Plan` objects and read results from :class:`RunReport`\\ s::
+
+    import repro
+
+    g = repro.Graph("pipeline")
+    a = g.add(lambda: 2, name="a")
+    b = g.add(lambda x: x * 21, a, name="b")      # dep inferred from `a`
+    with repro.Session(workers=2) as s:
+        report = s.run(g)
+    assert report[b] == 42
+
+The v1 surface (:func:`run_graph`, :class:`Runtime`, tid-keyed result
+dicts) remains available from :mod:`repro.core` as thin shims over the
+session layer; see README "API v2" for the migration table.  Heavyweight
+subsystems (models, kernels, linalg) stay behind their subpackages —
+``import repro`` pulls no JAX/numpy.
+"""
+
+from .api import Graph, Plan, PlanError, RunReport, Session, TaskHandle
+from .core import (
+    Channel,
+    ChannelEmpty,
+    ChannelFull,
+    DeadlockError,
+    ParallelSpec,
+    Runtime,
+    Task,
+    TaskContext,
+    TaskEvent,
+    TaskGraph,
+    run_graph,
+)
+from .core.policies import PolicyError, available_policies, register_policy
+
+__all__ = [
+    "Channel",
+    "ChannelEmpty",
+    "ChannelFull",
+    "DeadlockError",
+    "Graph",
+    "ParallelSpec",
+    "Plan",
+    "PlanError",
+    "PolicyError",
+    "Runtime",
+    "RunReport",
+    "Session",
+    "Task",
+    "TaskContext",
+    "TaskEvent",
+    "TaskGraph",
+    "TaskHandle",
+    "available_policies",
+    "register_policy",
+    "run_graph",
+]

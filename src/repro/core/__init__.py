@@ -19,7 +19,16 @@ Public API:
 """
 
 from .gang import GangState, is_eligible_to_sched
-from .policies import HistoryPolicy, HybridPolicy, RandomPolicy, make_policy
+from .policies import (
+    HistoryPolicy,
+    HybridPolicy,
+    PolicyError,
+    RandomPolicy,
+    available_policies,
+    make_policy,
+    register_policy,
+    resolve_policy,
+)
 from .runtime import Runtime, run_graph
 from .simulator import DeadlockError, Simulator, simulate
 from .static_schedule import (
@@ -32,6 +41,7 @@ from .static_schedule import (
 from .taskgraph import (
     Channel,
     ChannelEmpty,
+    ChannelFull,
     FrameResume,
     ParallelSpec,
     Task,
@@ -39,12 +49,14 @@ from .taskgraph import (
     TaskEvent,
     TaskFrame,
     TaskGraph,
+    WaitAnyRequest,
 )
 from .tracing import Trace
 
 __all__ = [
     "Channel",
     "ChannelEmpty",
+    "ChannelFull",
     "DeadlockError",
     "FrameResume",
     "GangReservation",
@@ -53,6 +65,7 @@ __all__ = [
     "HybridPolicy",
     "ListScheduler",
     "ParallelSpec",
+    "PolicyError",
     "RandomPolicy",
     "Runtime",
     "Simulator",
@@ -63,10 +76,14 @@ __all__ = [
     "TaskFrame",
     "TaskGraph",
     "Trace",
+    "WaitAnyRequest",
+    "available_policies",
     "is_eligible_to_sched",
     "issue_offsets_from_schedule",
     "make_policy",
     "microbatch_overlap_graph",
+    "register_policy",
+    "resolve_policy",
     "run_graph",
     "simulate",
 ]

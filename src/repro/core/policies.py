@@ -23,7 +23,11 @@ simulator and the benchmarks are reproducible.
 from __future__ import annotations
 
 import random
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Type
+
+
+class PolicyError(ValueError):
+    """An unknown victim-policy name (carries the valid options)."""
 
 
 class VictimPolicy:
@@ -119,16 +123,52 @@ class HybridPolicy(VictimPolicy):
         return HybridPolicy(worker_id, self.n_workers, self._seed, self.window)
 
 
-POLICIES = {
+#: The validated policy registry.  Every entry point that accepts a
+#: ``policy: str`` (``Session``, ``run_graph``, ``Runtime``, ``ReplayPool``,
+#: the simulator) resolves the name here, so a typo fails at the API
+#: boundary with the list of valid names instead of deep in dispatch.
+POLICIES: Dict[str, Type[VictimPolicy]] = {
     "random": RandomPolicy,
     "history": HistoryPolicy,
     "hybrid": HybridPolicy,
 }
 
 
-def make_policy(name: str, worker_id: int, n_workers: int, seed: int = 0) -> VictimPolicy:
+def available_policies() -> List[str]:
+    """Sorted names of every registered victim policy."""
+    return sorted(POLICIES)
+
+
+def register_policy(
+    name: str, cls: Optional[Type[VictimPolicy]] = None,
+) -> Callable[[Type[VictimPolicy]], Type[VictimPolicy]]:
+    """Register a :class:`VictimPolicy` subclass under ``name`` (usable as a
+    decorator).  Registered policies become valid ``policy=`` arguments
+    everywhere a built-in name is."""
+    def _register(c: Type[VictimPolicy]) -> Type[VictimPolicy]:
+        if not (isinstance(c, type) and issubclass(c, VictimPolicy)):
+            raise TypeError(f"{c!r} is not a VictimPolicy subclass")
+        POLICIES[name] = c
+        return c
+    return _register(cls) if cls is not None else _register
+
+
+def resolve(name: str) -> Type[VictimPolicy]:
+    """Resolve a policy name to its class, or raise :class:`PolicyError`
+    naming the valid choices.  The single validation point the session API
+    and the legacy entry points share."""
     try:
-        cls = POLICIES[name]
-    except KeyError:
-        raise ValueError(f"unknown victim policy {name!r}; options: {sorted(POLICIES)}")
-    return cls(worker_id, n_workers, seed)
+        return POLICIES[name]
+    except (KeyError, TypeError):
+        raise PolicyError(
+            f"unknown victim policy {name!r}; valid policies: "
+            f"{', '.join(available_policies())}") from None
+
+
+#: Package-level alias (``repro.core.resolve_policy``): ``resolve`` reads
+#: naturally as ``policies.resolve`` at the module level.
+resolve_policy = resolve
+
+
+def make_policy(name: str, worker_id: int, n_workers: int, seed: int = 0) -> VictimPolicy:
+    return resolve(name)(worker_id, n_workers, seed)

@@ -40,6 +40,8 @@ documented in DESIGN.md §2.
 
 from __future__ import annotations
 
+import threading
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 from ..exec.core import ExecutorCore, GangRegion
@@ -102,6 +104,12 @@ class Runtime:
     def gang_state(self):
         return self._dispatch.gang_state
 
+    @property
+    def last_stats(self) -> Dict[str, int]:
+        """Lightweight counters of the most recent run (steals, frame
+        suspensions) — surfaced by :class:`repro.api.RunReport`."""
+        return dict(self._dispatch.run_stats)
+
     def start(self) -> None:
         self._core.start()
 
@@ -155,73 +163,109 @@ class Runtime:
                                        spawn_ctx=spawn_ctx)
 
 
-def run_graph(
-    graph: TaskGraph,
-    n_workers: int,
-    *,
-    policy: str = "hybrid",
-    gang_default: bool = True,
-    seed: int = 0,
-    trace: bool = False,
-    timeout: float = 300.0,
-    record: bool = False,
-    replay: Any = None,
-    cache: Any = None,
-    pool: Any = None,
-) -> Dict[int, Any]:
-    """Convenience: run a graph on a fresh runtime and shut it down.
+class _RunGraphShim:
+    """The v1 convenience entry point, now a thin shim over the v2 session
+    API (:mod:`repro.api`).
 
-    Record-and-replay hooks (see :mod:`repro.replay`):
+    ``run_graph(graph, n)`` runs one dynamic execution on a short-lived
+    :class:`~repro.api.Session` lease.  The old mutually-exclusive mode
+    kwargs map onto :class:`~repro.api.Plan` decisions:
 
-    * ``pool`` — a :class:`~repro.replay.ReplayPool`: serve the execution
-      from a persistent per-shape dispatch leasing a shared worker core
-      (records on first sight, replays after, adaptively re-records on
-      drift).  The serving-loop path: no per-request runtime or executor
-      construction.  ``gang_default`` and ``seed`` are forwarded to the
-      pool's dynamic warmup/recording runs; ``record``/``replay``/``cache``/
-      ``trace`` are the pool's own business and rejected when combined with
-      it;
-    * ``replay`` — a :class:`~repro.replay.Recording`: skip the dynamic
-      scheduler entirely and replay the graph on a
-      :class:`~repro.replay.ReplayExecutor`;
-    * ``cache`` — a :class:`~repro.replay.GraphCache`: replay on a cache hit
-      for this (structure, ``n_workers``, ``policy``); on a miss, run
-      dynamically with recording on and store the recording, so the next
-      same-shaped call replays;
-    * ``record`` — instrument the dynamic run; the recording is returned via
-      ``run_graph.last_recording`` (also stored in ``cache`` when given).
+    * ``record=True``  -> ``Session.run(graph, record=True)``;
+    * ``replay=rec``   -> a ``Plan(mode="replay", recording=rec)``;
+    * ``cache=c``      -> ``Session(cache=c)`` (record on miss, replay on
+      hit);
+    * ``pool=p``       -> ``p.serve(...)`` (``record``/``replay``/
+      ``cache``/``trace`` are the pool's own business and rejected when
+      combined with it).
+
+    The v1 ``run_graph.last_recording`` module global is **gone from the
+    library path**; this shim keeps a deprecation-warned, read-only,
+    *thread-local* alias for old callers.  New code reads the recording off
+    the :class:`~repro.api.RunReport` a session returns.
     """
-    if pool is not None:
-        if record or replay is not None or cache is not None or trace:
-            raise ValueError(
-                "run_graph(pool=...) owns recording/replay/caching itself; "
-                "record/replay/cache/trace cannot be combined with a pool")
-        results = pool.run(graph, n_workers, policy=policy,
-                           gang_default=gang_default, seed=seed,
-                           timeout=timeout)
-        run_graph.last_recording = pool.last_recording
-        return results
-    if replay is not None:
-        from ..replay.executor import replay_graph
-        run_graph.last_recording = replay
-        return replay_graph(graph, replay, timeout=timeout)
-    if cache is not None:
-        rec = cache.lookup(graph, n_workers, policy)
-        if rec is not None:
-            from ..replay.executor import replay_graph
-            run_graph.last_recording = rec
-            # lookup already matched this graph's digest — skip re-hashing
-            # the structure on the hot path
-            return replay_graph(graph, rec, timeout=timeout,
-                                check_digest=False)
-        record = True
-    rt = Runtime(n_workers, policy=policy, gang_default=gang_default, seed=seed, trace=trace)
-    with rt:
-        results = rt.run(graph, timeout=timeout, record=record)
-    run_graph.last_recording = rt.last_recording
-    if cache is not None and rt.last_recording is not None:
-        cache.store(rt.last_recording)
-    return results
+
+    def __init__(self) -> None:
+        self._tls = threading.local()
+
+    # -- the deprecated alias -------------------------------------------
+    @property
+    def last_recording(self):
+        """Deprecated: the recording involved in this thread's most recent
+        ``run_graph`` call.  Use ``Session.run(...).recording``."""
+        warnings.warn(
+            "run_graph.last_recording is deprecated; use the RunReport "
+            "returned by repro.Session.run (report.recording)",
+            DeprecationWarning, stacklevel=2)
+        return getattr(self._tls, "recording", None)
+
+    def _note(self, recording: Any) -> None:
+        self._tls.recording = recording
+
+    # -- the call --------------------------------------------------------
+    def __call__(
+        self,
+        graph: TaskGraph,
+        n_workers: int,
+        *,
+        policy: str = "hybrid",
+        gang_default: bool = True,
+        seed: int = 0,
+        trace: bool = False,
+        timeout: float = 300.0,
+        record: bool = False,
+        replay: Any = None,
+        cache: Any = None,
+        pool: Any = None,
+    ) -> Dict[int, Any]:
+        from ..api.session import Plan, Session
+        from .policies import resolve as resolve_policy
+
+        resolve_policy(policy)            # typos fail here, with valid names
+        if pool is not None:
+            if record or replay is not None or cache is not None or trace:
+                raise ValueError(
+                    "run_graph(pool=...) owns recording/replay/caching "
+                    "itself; record/replay/cache/trace cannot be combined "
+                    "with a pool")
+            out = pool.serve(graph, n_workers, policy=policy,
+                             gang_default=gang_default, seed=seed,
+                             timeout=timeout)
+            # v1 callers also read pool.last_recording after the call
+            pool.last_recording = out.recording
+            self._note(out.recording)
+            return out.results
+        if replay is not None:
+            if record or cache is not None:
+                warnings.warn(
+                    "run_graph(replay=...) ignores record/cache; use a "
+                    "Session with a Plan instead", DeprecationWarning,
+                    stacklevel=2)
+            replay.validate_against(graph)     # v1 checked the digest here
+            session = Session(replay.n_workers, scheduler="replay",
+                              policy=policy, gang_default=gang_default,
+                              seed=seed)
+            try:
+                plan = Plan(mode="replay", n_workers=replay.n_workers,
+                            policy=policy, graph=graph, digest=replay.digest,
+                            recording=replay,
+                            reason="run_graph(replay=...) shim")
+                report = session.run(plan=plan, timeout=timeout)
+            finally:
+                session.close()
+            self._note(report.recording)
+            return report.results
+        session = Session(n_workers, scheduler="dynamic", policy=policy,
+                          gang_default=gang_default, seed=seed, cache=cache,
+                          trace=trace)
+        try:
+            report = session.run(graph, record=record or None,
+                                 timeout=timeout)
+        finally:
+            session.close()
+        self._note(report.recording)
+        return report.results
 
 
-run_graph.last_recording = None
+#: v1 entry point (shim; see :class:`_RunGraphShim`).
+run_graph = _RunGraphShim()

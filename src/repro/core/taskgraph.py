@@ -70,40 +70,95 @@ class ChannelEmpty(Exception):
     """:meth:`Channel.recv_nowait` on an empty channel."""
 
 
+class ChannelFull(Exception):
+    """:meth:`Channel.send` on a full *bounded* channel.  Use
+    :meth:`TaskContext.send` for backpressure: a frame body parks, a plain
+    body blocks work-conservingly, until a receiver frees space."""
+
+
 class Channel:
     """A multi-producer multi-consumer FIFO for task-internal communication.
 
-    ``send`` never blocks.  Receiving goes through
-    :meth:`TaskContext.recv`: a generator body suspends its frame until an
-    item arrives (the worker keeps scheduling); a plain body blocks its
-    kernel thread work-conservingly.  Delivery to parked frames happens
-    under the channel lock, so a ``send`` racing a frame park can never be
-    lost: either the parking side sees the item, or the sender sees the
-    waiter.
+    ``send`` on the default *unbounded* channel never blocks.  With
+    ``capacity=N`` the channel is *bounded*: senders must pace themselves —
+    ``ctx.send(ch, v)`` suspends a frame body (``yield ctx.send(ch, v)``)
+    or blocks a plain body work-conservingly until a receiver frees a slot,
+    and the raw :meth:`send` raises :class:`ChannelFull` instead of
+    silently growing the buffer.
+
+    Receiving goes through :meth:`TaskContext.recv`: a generator body
+    suspends its frame until an item arrives (the worker keeps scheduling);
+    a plain body blocks its kernel thread work-conservingly.  Delivery to
+    parked frames happens under the channel lock, so a ``send`` racing a
+    frame park can never be lost: either the parking side sees the item, or
+    the sender sees the waiter.  On a bounded channel, a receive that frees
+    a slot promotes the oldest parked *sender* (its value enters the buffer
+    in park order); plain-body senders polling :meth:`try_send` may
+    interleave with parked frame senders — FIFO fairness is per mechanism,
+    not global.
     """
 
-    __slots__ = ("name", "_lock", "_items", "_waiters")
+    __slots__ = ("name", "capacity", "_lock", "_items", "_waiters",
+                 "_send_waiters")
 
-    def __init__(self, name: str = "channel"):
+    def __init__(self, name: str = "channel", capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"channel capacity must be >= 1, got {capacity}")
         self.name = name
+        self.capacity = capacity
         self._lock = threading.Lock()
         self._items: Deque[Any] = deque()
         self._waiters: Deque[Callable[[Any], None]] = deque()
+        # parked frame senders of a bounded channel: (waker, value) pairs
+        self._send_waiters: Deque[Tuple[Callable[[Any], None], Any]] = deque()
 
     def send(self, value: Any) -> None:
+        """Non-suspending send.  Bounded channels raise :class:`ChannelFull`
+        when no slot (and no parked receiver) is available — backpressure
+        needs the scheduler, so it lives in :meth:`TaskContext.send`."""
+        if not self.try_send(value):
+            raise ChannelFull(
+                f"channel {self.name!r} is full (capacity {self.capacity}); "
+                "use ctx.send(channel, value) so the sender can suspend")
+
+    def try_send(self, value: Any) -> bool:
+        """Attempt a send without waiting; False when the channel is full."""
         with self._lock:
             waiter = self._waiters.popleft() if self._waiters else None
             if waiter is None:
+                if (self.capacity is not None
+                        and len(self._items) >= self.capacity):
+                    return False
                 self._items.append(value)
         _bump_activity()
         if waiter is not None:
             waiter(value)
+        return True
+
+    def _pop_item(self) -> Any:
+        """Take the head item and promote the oldest parked sender into the
+        freed slot.  Caller holds ``_lock``; returns ``(value, promoted)``
+        where ``promoted`` must be called outside the lock (or None)."""
+        value = self._items.popleft()
+        promoted = None
+        if self._send_waiters:
+            waker, pending = self._send_waiters.popleft()
+            self._items.append(pending)
+            promoted = waker
+        return value, promoted
 
     def try_recv(self) -> Tuple[bool, Any]:
         with self._lock:
-            if self._items:
-                return True, self._items.popleft()
-            return False, None
+            if not self._items:
+                return False, None
+            value, promoted = self._pop_item()
+        if self.capacity is not None:
+            # blocked senders poll/confirm on the activity epoch: a consumed
+            # slot is the progress they are waiting for
+            _bump_activity()
+        if promoted is not None:
+            promoted(None)
+        return True, value
 
     def recv_nowait(self) -> Any:
         ok, value = self.try_recv()
@@ -121,9 +176,15 @@ class Channel:
         ``("ready", item)`` or ``("parked", None)``."""
         with self._lock:
             if self._items:
-                return "ready", self._items.popleft()
-            self._waiters.append(waiter)
-            return "parked", None
+                value, promoted = self._pop_item()
+            else:
+                self._waiters.append(waiter)
+                return "parked", None
+        if self.capacity is not None:
+            _bump_activity()
+        if promoted is not None:
+            promoted(None)
+        return "ready", value
 
     def _cancel(self, waiter: Callable[[Any], None]) -> bool:
         """Remove a registered waiter; False if it already fired."""
@@ -133,6 +194,45 @@ class Channel:
                 return True
             except ValueError:
                 return False
+
+    def _park_send(self, waiter: Callable[[Any], None],
+                   value: Any) -> Tuple[str, Any]:
+        """Atomically deliver/enqueue ``value`` or register the sender
+        ``waiter`` for the next freed slot (bounded channels)."""
+        with self._lock:
+            recv_waiter = self._waiters.popleft() if self._waiters else None
+            if recv_waiter is None:
+                if (self.capacity is not None
+                        and len(self._items) >= self.capacity):
+                    self._send_waiters.append((waiter, value))
+                    return "parked", None
+                self._items.append(value)
+        _bump_activity()
+        if recv_waiter is not None:
+            recv_waiter(value)
+        return "ready", None
+
+    def _cancel_send(self, waiter: Callable[[Any], None]) -> bool:
+        with self._lock:
+            for i, (w, _) in enumerate(self._send_waiters):
+                if w is waiter:
+                    del self._send_waiters[i]
+                    return True
+            return False
+
+    def _requeue(self, value: Any) -> None:
+        """Hand back an item a losing multi-wait racer consumed.  Delivers
+        to a parked receiver if one exists, else re-enters the buffer —
+        *bypassing* the capacity check: the item was already admitted once,
+        so bouncing it off a refilled bounded channel would drop it (or
+        blow up in an unrelated sender's callback)."""
+        with self._lock:
+            waiter = self._waiters.popleft() if self._waiters else None
+            if waiter is None:
+                self._items.append(value)
+        _bump_activity()
+        if waiter is not None:
+            waiter(value)
 
 
 class TaskEvent:
@@ -241,6 +341,174 @@ class WaitRequest(FrameRequest):
 
     def describe(self) -> str:
         return f"wait({self.event.name})"
+
+
+class SendRequest(FrameRequest):
+    """A bounded-channel send: the *sender* suspends until a slot frees
+    (the backpressure half of the paper's blocking communication)."""
+
+    kind = "send"
+    __slots__ = ("channel", "value")
+
+    def __init__(self, channel: Channel, value: Any):
+        self.channel = channel
+        self.value = value
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        return (self.channel.try_send(self.value), None)
+
+    def park(self, waiter):
+        return self.channel._park_send(waiter, self.value)
+
+    def cancel(self, waiter):
+        return self.channel._cancel_send(waiter)
+
+    def describe(self) -> str:
+        return f"send({self.channel.name})"
+
+
+class WaitAnyRequest(FrameRequest):
+    """Select-style multi-wait: satisfied by whichever of its sub-requests
+    (``recv`` on a channel / ``wait`` on an event) becomes ready first.
+
+    The resume value is ``(index, value)``: the position of the winning
+    source in the argument list plus that source's payload.  Exactly one
+    source is consumed — a channel item claimed by a losing racer is
+    re-queued, never dropped.  The winning index is instrumented by the
+    recording dynamic dispatch and pinned on replay
+    (:meth:`pinned`), so a replayed select is a deterministic choice.
+    """
+
+    kind = "wait_any"
+    __slots__ = ("requests", "_lock", "_fired", "_children")
+
+    def __init__(self, requests: Sequence[FrameRequest]):
+        reqs = tuple(requests)
+        if not reqs:
+            raise ValueError("wait_any needs at least one channel/event")
+        for r in reqs:
+            if not isinstance(r, (RecvRequest, WaitRequest)):
+                raise TypeError(
+                    "wait_any sources must be channels or events "
+                    f"(recv/wait), got {getattr(r, 'kind', r)!r}")
+        self.requests = reqs
+        self._lock = threading.Lock()
+        self._fired = False
+        # (index, child_waiter) pairs registered with the sub-requests
+        self._children: List[Tuple[int, Callable[[Any], None]]] = []
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        for i, r in enumerate(self.requests):
+            ok, v = r.try_immediate()
+            if ok:
+                return True, (i, v)
+        return False, None
+
+    def _claim(self) -> bool:
+        with self._lock:
+            if self._fired:
+                return False
+            self._fired = True
+            return True
+
+    def _cancel_children(self, except_waiter=None) -> None:
+        for j, c in self._children:
+            if c is not except_waiter:
+                self.requests[j].cancel(c)
+
+    def park(self, waiter: Callable[[Any], None]) -> Tuple[str, Any]:
+        # children append incrementally so a child that fires mid-loop can
+        # cancel every sibling parked so far; the post-loop sweep catches
+        # any parked after the winner (cancel is a no-op on consumed ones)
+        self._children = children = []
+        for i, r in enumerate(self.requests):
+            with self._lock:
+                if self._fired:
+                    break           # a parked child already won
+            child = self._make_child(i, r, waiter)
+            status, v = r.park(child)
+            if status == "ready":
+                if self._claim():
+                    for j, c in children:
+                        self.requests[j].cancel(c)
+                    return "ready", (i, v)
+                # a previously-parked child fired concurrently and owns the
+                # delivery; this ready value must not drop
+                if isinstance(r, RecvRequest):
+                    r.channel._requeue(v)
+                break
+            children.append((i, child))
+        with self._lock:
+            fired = self._fired
+        if fired:
+            for j, c in children:
+                self.requests[j].cancel(c)
+            return "parked", None   # the winner child calls ``waiter``
+        return "parked", None
+
+    def _make_child(self, i: int, r: FrameRequest,
+                    waiter: Callable[[Any], None]) -> Callable[[Any], None]:
+        def child(value: Any = None, *, _i=i, _r=r) -> None:
+            if not self._claim():
+                # lost the race: hand a consumed channel item back (events
+                # are sticky — nothing to return).  _requeue bypasses the
+                # capacity check: a full bounded channel must not drop the
+                # item or raise inside the producing sender's callback.
+                if isinstance(_r, RecvRequest):
+                    _r.channel._requeue(value)
+                return
+            self._cancel_children(except_waiter=child)
+            waiter((_i, value))
+        return child
+
+    def cancel(self, waiter: Callable[[Any], None]) -> bool:
+        if not self._claim():
+            return False
+        self._cancel_children()
+        return True
+
+    def pinned(self, index: int) -> "FrameRequest":
+        """The replay form: wait only on the recorded winner, delivering the
+        same ``(index, value)`` shape."""
+        return _PinnedChoice(self.requests[index], index)
+
+    def describe(self) -> str:
+        return ("wait_any("
+                + ", ".join(r.describe() for r in self.requests) + ")")
+
+
+class _PinnedChoice(FrameRequest):
+    """A :class:`WaitAnyRequest` whose winning index was recorded: replay
+    parks only on that source, making the select deterministic."""
+
+    kind = "wait_any"
+    __slots__ = ("request", "index", "_wrapped")
+
+    def __init__(self, request: FrameRequest, index: int):
+        self.request = request
+        self.index = index
+        self._wrapped: Optional[Callable[[Any], None]] = None
+
+    def try_immediate(self) -> Tuple[bool, Any]:
+        ok, v = self.request.try_immediate()
+        return (True, (self.index, v)) if ok else (False, None)
+
+    def park(self, waiter):
+        def wrapped(value: Any = None) -> None:
+            waiter((self.index, value))
+        self._wrapped = wrapped
+        status, v = self.request.park(wrapped)
+        if status == "ready":
+            return "ready", (self.index, v)
+        return status, None
+
+    def cancel(self, waiter):
+        if self._wrapped is None:
+            return False
+        return self.request.cancel(self._wrapped)
+
+    def describe(self) -> str:
+        return f"wait_any[{self.index}]({self.request.describe()})"
 
 
 class YieldRequest(FrameRequest):
@@ -409,6 +677,49 @@ class TaskContext:
                     f"wait on unset event {event.name!r} outside a runtime")
             return None
         return rt.ctx_wait(event, self)
+
+    def send(self, channel: Channel, value: Any) -> Any:
+        """Send with backpressure.  Generator body: ``yield ctx.send(ch,
+        v)`` suspends the frame while a bounded channel is full.  Plain
+        body: blocks this worker work-conservingly until a slot frees.
+        Unbounded channels never wait (equivalent to ``channel.send``)."""
+        if self._in_frame:
+            return SendRequest(channel, value)
+        rt = self.runtime
+        if rt is None or not hasattr(rt, "ctx_send"):
+            channel.send(value)             # serial context: no waiting
+            return None
+        return rt.ctx_send(channel, value, self)
+
+    def wait_any(self, *sources: Any) -> Any:
+        """Select-style multi-wait over channels and/or events: returns
+        ``(index, value)`` for whichever source is satisfied first.
+        Generator body: ``idx, v = yield ctx.wait_any(ch_a, ch_b, ev)``
+        suspends until one fires.  Plain body: blocks work-conservingly.
+        Recording captures the winning index; replay pins it, so the
+        choice is deterministic."""
+        request = WaitAnyRequest([self._as_request(s) for s in sources])
+        if self._in_frame:
+            return request
+        rt = self.runtime
+        if rt is None or not hasattr(rt, "ctx_wait_any"):
+            ok, result = request.try_immediate()
+            if not ok:
+                raise RuntimeError(
+                    "wait_any with no source ready outside a runtime")
+            return result
+        return rt.ctx_wait_any(request, self)
+
+    @staticmethod
+    def _as_request(source: Any) -> FrameRequest:
+        if isinstance(source, Channel):
+            return RecvRequest(source)
+        if isinstance(source, TaskEvent):
+            return WaitRequest(source)
+        if isinstance(source, (RecvRequest, WaitRequest)):
+            return source
+        raise TypeError(
+            f"wait_any sources must be Channel/TaskEvent, got {source!r}")
 
     def yield_(self) -> Any:
         """A cooperative scheduling point.  Generator body: ``yield

@@ -57,6 +57,7 @@ from ..core.taskgraph import (
     TaskEvent,
     TaskFrame,
     TaskGraph,
+    WaitAnyRequest,
     activity_epoch,
     note_parked,
     note_unparked,
@@ -149,6 +150,12 @@ class DynamicDispatch(DispatchStrategy):
         self._rec_forks: List[Tuple[int, int, int]] = []
         self._rec_comms: List[int] = []
         self._rec_comm_lock = threading.Lock()
+        # wait_any winners: (tid, seg) -> winning source index (replay pins
+        # the recorded choice, making selects deterministic)
+        self._rec_wait_choices: Dict[Tuple[int, int], int] = {}
+
+        # always-on lightweight run counters (surfaced in RunReport.stats)
+        self.run_stats: Dict[str, int] = {"steals": 0, "frame_suspends": 0}
 
     # ------------------------------------------------------------------
     # DispatchStrategy interface
@@ -189,6 +196,8 @@ class DynamicDispatch(DispatchStrategy):
             self._rec_steals = [[] for _ in range(self.n_workers)]
             self._rec_forks = []
             self._rec_comms = []
+            self._rec_wait_choices = {}
+        self.run_stats = {"steals": 0, "frame_suspends": 0}
         # master thread (worker 0's queue) receives the roots
         for t in graph.roots():
             self._locals[0].append(t)
@@ -349,6 +358,7 @@ class DynamicDispatch(DispatchStrategy):
         pol.record(victim, got is not None)
         if got is None:
             return False
+        self.run_stats["steals"] += 1
         if self._recording:
             if isinstance(got, _GangULT):
                 entry = (got.region.spawn_tid, got.thread_num) \
@@ -471,6 +481,7 @@ class DynamicDispatch(DispatchStrategy):
             self._suspended[frame.task.tid] = frame
         note_parked(frame)
         core.note_frame_suspended()
+        self.run_stats["frame_suspends"] += 1
         status, value = request.park(waker)
         if status == "ready":
             # the primitive was already satisfied (or this is a plain
@@ -488,6 +499,12 @@ class DynamicDispatch(DispatchStrategy):
             if self._suspended.pop(frame.task.tid, None) is None:
                 return
         note_unparked(frame)
+        if self._recording and isinstance(frame.request, WaitAnyRequest):
+            # the resume value of a multi-wait is (winner index, payload);
+            # record the winner so replay pins the same choice.  (tid, seg)
+            # keys are unique, so racing wakers never collide.
+            self._rec_wait_choices[(frame.task.tid, frame.resumes + 1)] = \
+                int(value[0])
         frame.resume_value = value
         frame.request = None
         frame.waker = None
@@ -618,6 +635,18 @@ class DynamicDispatch(DispatchStrategy):
         self._blocking_wait(
             lambda: ((True, None) if event.is_set() else (False, None)))
 
+    def ctx_send(self, channel: Channel, value: Any, ctx: TaskContext) -> None:
+        """Plain-body backpressured send: block work-conservingly until the
+        bounded channel has a slot (unbounded channels succeed at once)."""
+        self._blocking_wait(
+            lambda: ((True, None) if channel.try_send(value)
+                     else (False, None)))
+
+    def ctx_wait_any(self, request: WaitAnyRequest, ctx: TaskContext) -> Any:
+        """Plain-body select: poll the sources work-conservingly; returns
+        ``(index, value)`` of the first satisfied one."""
+        return self._blocking_wait(request.try_immediate)
+
     def ctx_yield(self, ctx: TaskContext) -> None:
         """Plain-body cooperative scheduling point: serve one unit inline."""
         self.schedule_once(self.core.worker_id())
@@ -706,5 +735,6 @@ class DynamicDispatch(DispatchStrategy):
             gang_issue_order=[f[0] for f in self._rec_forks],
             steals=steals,
             collective_order=list(self._rec_comms),
+            wait_choices=dict(self._rec_wait_choices),
             source="dynamic",
         )

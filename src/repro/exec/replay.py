@@ -65,6 +65,7 @@ from ..core.taskgraph import (
     TaskEvent,
     TaskFrame,
     TaskGraph,
+    WaitAnyRequest,
     activity_epoch,
     note_parked,
     note_unparked,
@@ -102,6 +103,10 @@ class ReplayDispatch(DispatchStrategy):
             (e.tid, e.seg): w
             for w, order in enumerate(self._orders)
             for e in order if isinstance(e, FrameResume)}
+        # (tid, seg) -> recorded wait_any winner index (selects replay as
+        # the recorded deterministic choice)
+        self._wait_choices: Dict[Tuple[int, int], int] = dict(
+            getattr(recording, "wait_choices", {}) or {})
 
         self._worker_cvs = [threading.Condition() for _ in range(n)]
         self._waiting = [False] * n          # worker w is parked on its cv
@@ -435,6 +440,12 @@ class ReplayDispatch(DispatchStrategy):
     def _park_frame(self, w: int, frame: TaskFrame, request) -> None:
         core = self.core
         tid = frame.task.tid
+        if isinstance(request, WaitAnyRequest):
+            # pin the recorded winner: the select resolves to the same
+            # (index, value) choice as the recorded run
+            choice = self._wait_choices.get((tid, frame.resumes + 1))
+            if choice is not None and 0 <= choice < len(request.requests):
+                request = request.pinned(choice)
 
         def waker(value=None, *, _frame=frame):
             self._wake_frame(_frame, value)
@@ -501,6 +512,14 @@ class ReplayDispatch(DispatchStrategy):
     def ctx_wait(self, event: TaskEvent, ctx: TaskContext) -> None:
         self._blocking_wait(
             lambda: ((True, None) if event.is_set() else (False, None)))
+
+    def ctx_send(self, channel: Channel, value: Any, ctx: TaskContext) -> None:
+        self._blocking_wait(
+            lambda: ((True, None) if channel.try_send(value)
+                     else (False, None)))
+
+    def ctx_wait_any(self, request: WaitAnyRequest, ctx: TaskContext) -> Any:
+        return self._blocking_wait(request.try_immediate)
 
     def ctx_yield(self, ctx: TaskContext) -> None:
         self._fallback_once(self.core.worker_id())

@@ -24,6 +24,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from ..api.graph import Graph
 from ..core.taskgraph import TaskGraph
 from .tiles import CostModel, TileStore, tile_gemm_sub, tile_potrf, tile_trsm_right_lower_t
 
@@ -43,9 +44,14 @@ def build_cholesky_graph(
 ) -> TaskGraph:
     """Build the tiled-Cholesky task graph.  If ``store`` is given, tasks
     carry numeric bodies factoring it in place (lower-triangular result);
-    otherwise bodies are ``None`` (cost-model graphs for the simulator)."""
+    otherwise bodies are ``None`` (cost-model graphs for the simulator).
+
+    Built through the v2 :class:`~repro.api.Graph` (``add`` returns
+    :class:`~repro.api.TaskHandle` futures usable as ``deps=``); tile
+    writes are ordered by the explicit edges, so the structure — and the
+    replay-cache digest — is identical to the v1 construction."""
     cm = cost or CostModel()
-    g = TaskGraph(f"cholesky[{nb}x{nb},b={b}]")
+    g = Graph(f"cholesky[{nb}x{nb},b={b}]")
     numeric = store is not None
     noop = (lambda ctx: None) if numeric else None
 

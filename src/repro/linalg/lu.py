@@ -20,6 +20,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.graph import Graph
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import lu_panel_region
@@ -44,7 +45,7 @@ def build_lu_graph(
     comm: bool = True,
 ) -> TaskGraph:
     cm = cost or CostModel()
-    g = TaskGraph(f"lu[{nb}x{nb},b={b}]")
+    g = Graph(f"lu[{nb}x{nb},b={b}]")
     numeric = store is not None
     noop = (lambda ctx: None) if numeric else None
 

@@ -16,6 +16,7 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.graph import Graph
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import qr_form_t, qr_panel_region
@@ -34,7 +35,7 @@ def build_qr_graph(
     comm: bool = True,
 ) -> TaskGraph:
     cm = cost or CostModel()
-    g = TaskGraph(f"qr[{nb}x{nb},b={b}]")
+    g = Graph(f"qr[{nb}x{nb},b={b}]")
     numeric = store is not None
     noop = (lambda ctx: None) if numeric else None
     # side store for the panel reflectors: k -> (V, T) with V (m x b)

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
+from ..api.graph import Graph
 from ..core.taskgraph import Channel, TaskGraph
 
 # decode_fn(params, cache, tok) -> (new_cache, logits); sample_fn(logits) -> tok
@@ -88,23 +89,26 @@ def build_decode_graph(
     :class:`~repro.replay.ReplayPool` records step 1 (including the gather
     frame's suspension points) and replays every later step."""
     sample = sample_fn or greedy_sample
-    g = TaskGraph(f"decode_step[{state.n_shards}]")
+    g = Graph(f"decode_step[{state.n_shards}]")
     tokens = Channel("decode.tokens")
     for s in range(state.n_shards):
-        def _decode(ctx, s=s):
+        def _decode(s=s):
             sh = state.shards[s]
             sh.cache, sh.logits = decode_fn(state.params, sh.cache, sh.tok)
+            return sh.logits
 
         dec = g.add(_decode, name=f"decode{s}", kind="compute", cost=1.0)
 
-        def _sample(ctx, s=s):
+        def _sample(logits, s=s):
             sh = state.shards[s]
-            sh.tok = sample(sh.logits)
+            sh.tok = sample(logits)
             tokens.send((s, sh.tok))
             return sh.tok
 
-        g.add(_sample, deps=[dec], name=f"sample{s}", kind="compute",
-              cost=0.1)
+        # dataflow: the decode handle is the sample's argument — the edge
+        # is inferred, and the logits flow as a value instead of through
+        # shard state (the cache/tok mutations still ride the shard)
+        g.add(_sample, dec, name=f"sample{s}", kind="compute", cost=0.1)
 
     n_shards = state.n_shards
 

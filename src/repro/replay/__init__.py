@@ -69,7 +69,7 @@ gang-id) issue order.
 from .cache import GraphCache, cache_key
 from .executor import ReplayError, ReplayExecutor, replay_graph
 from .graph_key import GraphKey, graph_key
-from .pool import PoolEntryStats, ReplayPool
+from .pool import PoolEntryStats, PoolRun, ReplayPool
 from .recording import GangPlacement, Recording, RecordingError
 from .remap import RemapError, remap_recording
 
@@ -78,6 +78,7 @@ __all__ = [
     "GraphCache",
     "GraphKey",
     "PoolEntryStats",
+    "PoolRun",
     "Recording",
     "RecordingError",
     "RemapError",

@@ -63,6 +63,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
+from ..core.policies import resolve as resolve_policy
 from ..core.taskgraph import TaskGraph
 from ..exec.core import ExecutorCore
 from ..exec.registry import release_shared_core, shared_core
@@ -71,6 +72,21 @@ from .executor import ReplayExecutor
 from .graph_key import GraphKey, graph_key
 from .recording import Recording
 from .remap import RemapError, nearest_worker_count, remap_recording
+
+
+@dataclasses.dataclass
+class PoolRun:
+    """One served request, structured: results, the recording that is (or
+    just became) live for the shape, how the request was served (``mode``:
+    ``warmup`` / ``record`` / ``adopt`` / ``remap`` / ``rerecord`` /
+    ``replay``) and a snapshot of the entry's serving counters.  The
+    session API wraps this into a :class:`~repro.api.session.RunReport`;
+    the legacy :meth:`ReplayPool.run` returns just ``results``."""
+
+    results: Dict[int, Any]
+    recording: Optional[Recording]
+    mode: str
+    stats: Dict[str, Any]
 
 
 @dataclasses.dataclass
@@ -280,7 +296,7 @@ class ReplayPool:
 
     # ------------------------------------------------------------------
     # serving
-    def run(
+    def serve(
         self,
         graph: TaskGraph,
         n_workers: int,
@@ -290,8 +306,10 @@ class ReplayPool:
         seed: int = 0,
         timeout: float = 300.0,
         key: Optional[GraphKey] = None,
-    ) -> Dict[int, Any]:
-        """Serve one execution of ``graph``; returns ``{tid: result}``.
+    ) -> PoolRun:
+        """Serve one execution of ``graph``; returns a :class:`PoolRun`
+        (results + recording + how the request was served) — no state is
+        smuggled through pool attributes.
 
         ``gang_default`` / ``seed`` configure the dynamic dispatch used for
         warmup, recording, and re-recording runs (replays are driven purely
@@ -302,6 +320,7 @@ class ReplayPool:
         already knows it (e.g. a decode loop rebuilding one shape — see
         :func:`repro.models.decode_graph_key`); the executor still enforces
         the 1:1 task cover, so a wrong key fails loudly, not silently."""
+        resolve_policy(policy)
         if key is None:
             key = graph_key(graph)
         ckey = cache_key(key, n_workers, policy)
@@ -329,16 +348,15 @@ class ReplayPool:
                 raise RuntimeError("ReplayPool is shut down")
             entry.stats.requests += 1
             if entry.executor is None:
-                results = self._materialize(entry, key, graph, n_workers,
-                                            rt_kwargs, timeout)
-                self.last_recording = entry.recording
-                return results
+                results, mode = self._materialize(entry, key, graph,
+                                                  n_workers, rt_kwargs,
+                                                  timeout)
+                return self._outcome(entry, results, mode)
             if entry.needs_rerecord:
                 if builder is None:
                     results = self._rerecord_inline(entry, graph, n_workers,
                                                     rt_kwargs, timeout)
-                    self.last_recording = entry.recording
-                    return results
+                    return self._outcome(entry, results, "rerecord")
                 if not entry.rerecord_inflight:
                     entry.rerecord_inflight = True
                     threading.Thread(
@@ -348,8 +366,34 @@ class ReplayPool:
                         name=f"replay-pool-rerecord-{ckey[:12]}",
                     ).start()
             results = self._replay(entry, graph, timeout)
-            self.last_recording = entry.recording
-            return results
+            return self._outcome(entry, results, "replay")
+
+    @staticmethod
+    def _outcome(entry: _PoolEntry, results: Dict[int, Any],
+                 mode: str) -> PoolRun:
+        return PoolRun(results=results, recording=entry.recording,
+                       mode=mode, stats=entry.stats.as_dict())
+
+    def run(
+        self,
+        graph: TaskGraph,
+        n_workers: int,
+        *,
+        policy: str = "hybrid",
+        gang_default: bool = True,
+        seed: int = 0,
+        timeout: float = 300.0,
+        key: Optional[GraphKey] = None,
+    ) -> Dict[int, Any]:
+        """Legacy entry point: serve and return the bare ``{tid: result}``
+        dict.  ``self.last_recording`` is refreshed for old callers; new
+        code should use :meth:`serve` (or a ``Session(scheduler="pool")``)
+        and read the recording off the returned :class:`PoolRun`."""
+        out = self.serve(graph, n_workers, policy=policy,
+                         gang_default=gang_default, seed=seed,
+                         timeout=timeout, key=key)
+        self.last_recording = out.recording
+        return out.results
 
     def _replay(self, entry: _PoolEntry, graph: TaskGraph,
                 timeout: float) -> Dict[int, Any]:
@@ -370,12 +414,15 @@ class ReplayPool:
         n_workers: int,
         rt_kwargs: Dict[str, Any],
         timeout: float,
-    ) -> Dict[int, Any]:
-        """Cold path: adopt / remap / record, install the lease, serve."""
+    ) -> Tuple[Dict[int, Any], str]:
+        """Cold path: adopt / remap / record, install the lease, serve.
+        Returns ``(results, mode)``."""
         policy = rt_kwargs["policy"]
+        mode = "adopt"
         rec = self.cache.lookup(key, n_workers, policy)
         if rec is None and self.allow_remap:
             rec = self._remap_from_cache(entry, key, n_workers, policy)
+            mode = "remap"
         if rec is not None:
             self._install(entry, rec)
             if (self.latency_drift_factor is not None
@@ -388,8 +435,8 @@ class ReplayPool:
                 results, _, elapsed = self._run_dynamic(
                     graph, n_workers, rt_kwargs, timeout, record=False)
                 self._note_dynamic(entry, elapsed)
-                return results
-            return self._replay(entry, graph, timeout)
+                return results, mode
+            return self._replay(entry, graph, timeout), mode
         if entry.stats.warmups < self.warmup_runs:
             # serve cold requests dynamically without recording: the first
             # executions pay one-off costs (jit compiles) whose skew would
@@ -398,14 +445,14 @@ class ReplayPool:
             results, _, elapsed = self._run_dynamic(
                 graph, n_workers, rt_kwargs, timeout, record=False)
             self._note_dynamic(entry, elapsed)
-            return results
+            return results, "warmup"
         results, recording, elapsed = self._run_dynamic(
             graph, n_workers, rt_kwargs, timeout, record=True)
         entry.stats.records += 1
         self._note_dynamic(entry, elapsed)
         self.cache.store(recording)
         self._install(entry, recording)
-        return results
+        return results, "record"
 
     def _remap_from_cache(
         self,

@@ -61,6 +61,9 @@ class Recording:
     gang_issue_order: List[int] = dataclasses.field(default_factory=list)
     steals: List[Tuple[int, int, Entry]] = dataclasses.field(default_factory=list)
     collective_order: List[int] = dataclasses.field(default_factory=list)
+    # (tid, seg) -> winning source index of a ctx.wait_any select resolved
+    # at that resume segment; replay pins the recorded choice
+    wait_choices: Dict[Tuple[int, int], int] = dataclasses.field(default_factory=dict)
     source: str = "dynamic"                      # "dynamic" | "static"
 
     # ------------------------------------------------------------------
@@ -104,6 +107,12 @@ class Recording:
             raise RecordingError(
                 f"bad frame-resume entries {bad_resumes[:8]} (each (tid, seg) "
                 "must appear once, for an in-range task, with seg >= 1)")
+        bad_choices = [(k, i) for k, i in self.wait_choices.items()
+                       if k[0] >= n or k[1] < 1 or i < 0]
+        if bad_choices:
+            raise RecordingError(
+                f"bad wait_any choices {bad_choices[:8]} (keys must be "
+                "in-range (tid, seg >= 1) with a non-negative winner index)")
 
     # ------------------------------------------------------------------
     # serialization (plain data; gang entries become 2-lists)
@@ -127,6 +136,8 @@ class Recording:
             "gang_issue_order": list(self.gang_issue_order),
             "steals": [[t, v, enc(e)] for t, v, e in self.steals],
             "collective_order": list(self.collective_order),
+            "wait_choices": [[tid, seg, idx] for (tid, seg), idx
+                             in sorted(self.wait_choices.items())],
             "source": self.source,
         }
 
@@ -151,6 +162,8 @@ class Recording:
             gang_issue_order=list(d.get("gang_issue_order", [])),
             steals=[(s[0], s[1], dec(s[2])) for s in d.get("steals", [])],
             collective_order=list(d.get("collective_order", [])),
+            wait_choices={(int(c[0]), int(c[1])): int(c[2])
+                          for c in d.get("wait_choices", [])},
             source=d.get("source", "dynamic"),
         )
 

@@ -16,8 +16,9 @@ import pytest
 _WORKER_PREFIXES = (
     "repro-worker",        # Runtime's private core
     "replay-worker",       # ReplayExecutor's private core
-    "pool",                # ReplayPool shared cores (pool{N}-worker)
-    "exec-core",           # bare ExecutorCore default
+    "pool",                # ReplayPool private cores (pool{N}-worker)
+    "exec-core",           # bare ExecutorCore default + registry shared cores
+    "session",             # Session private cores (session{N}-worker)
     "replay-pool-rerecord",  # background re-recording threads
 )
 
