@@ -14,7 +14,12 @@ release the GIL):
   over a :class:`~repro.core.Channel`) with *blocking* plain-body consumers
   (each pins a worker work-conservingly) vs *suspendable* generator-frame
   consumers (each parks worker-free).  Contract: suspendable bodies are no
-  slower at equal workers (``no_slower`` per row, asserted in CI).
+  slower at equal workers (``no_slower`` per row, asserted in CI);
+* ``trace_off`` — the flight recorder's off-switch cost: the same warm
+  session serving the same graphs with ``trace=False`` vs ``trace=True``.
+  Contract: tracing OFF is no slower than tracing ON (the no-op emitter
+  adds no measurable per-event cost; ``no_slower`` per row, gated like
+  ``warm_reuse``).
 
 Every row carries ``noise`` — the observed relative spread ``(max-min)/min``
 across its repeats — which the CI workflow surfaces per run: the first step
@@ -149,6 +154,34 @@ def bench_reuse(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
     }
 
 
+def bench_trace_off(workers: int, iters: int = 10, repeats: int = 5) -> Dict:
+    """Tracing-off vs tracing-on on warm sessions serving the same graphs.
+    The observability contract is that the OFF path costs nothing: hot
+    loops call the module-level no-op emitter (one attribute call, zero
+    allocation), so ``off_ms <= on_ms * headroom`` must hold."""
+    graphs = [reuse_graph() for _ in range(iters)]
+    times: Dict[bool, List[float]] = {False: [], True: []}
+    for traced in (False, True):
+        with repro.Session(workers, trace=traced) as session:
+            session.run(graphs[0])                    # spawn outside the clock
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for g in graphs:
+                    session.run(g)
+                times[traced].append((time.perf_counter() - t0) / iters)
+    off_best, on_best = min(times[False]), min(times[True])
+    return {
+        "bench": "trace_off", "workers": workers,
+        "off_ms": round(off_best * 1e3, 4),
+        "on_ms": round(on_best * 1e3, 4),
+        "overhead": round(on_best / off_best, 3),
+        # the gated claim: the off-switch is free (off is no slower than
+        # on, with the same noise headroom the other rows use)
+        "no_slower": bool(off_best <= on_best * 1.25),
+        "noise": _spread(times[False]),
+    }
+
+
 def frames_graph(n_pairs: int, use_frames: bool, work_s: float) -> TaskGraph:
     """Fan-in communication: ``n_pairs`` consumers each receive one token
     from a channel fed by ``n_pairs`` independent producers (each doing
@@ -221,9 +254,12 @@ def main():
     reuse_rows = [bench_reuse(w) for w in WORKERS]
     emit(reuse_rows)
     print()
+    trace_rows = [bench_trace_off(w) for w in WORKERS]
+    emit(trace_rows)
+    print()
     frame_rows = [bench_frames(w) for w in FRAME_WORKERS]
     emit(frame_rows)
-    write_json(overlap_rows + reuse_rows + frame_rows)
+    write_json(overlap_rows + reuse_rows + trace_rows + frame_rows)
     print(f"# wrote {JSON_PATH}")
 
 

@@ -16,9 +16,15 @@ token stream must be bit-identical to the dynamic run's, and a recording
 remapped across worker counts (recorded at W, replayed at W±1) must again
 produce the identical stream.
 
+Each worker count also runs one *traced* decode step (flight recorder on)
+and reports its ``dispatch_overhead_fraction`` — the fraction of worker
+time NOT spent in task bodies, the number behind the multi-worker serving
+collapse (see README "Observability").  The last traced step is exported
+as Perfetto JSON (``TRACE_serving.json``) and schema-validated.
+
 Emits CSV rows (benchmarks.common schema) and ``BENCH_serving.json``.
 Env knobs: ``BENCH_SMOKE=1`` shrinks steps/workers for CI;
-``BENCH_SERVING_JSON`` overrides the output path.
+``BENCH_SERVING_JSON`` / ``BENCH_SERVING_TRACE`` override output paths.
 """
 
 from __future__ import annotations
@@ -38,6 +44,7 @@ STEPS = 8 if SMOKE else 24
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
 REMAP_FROM = 2
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
+TRACE_PATH = os.environ.get("BENCH_SERVING_TRACE", "TRACE_serving.json")
 
 
 def _setup():
@@ -108,20 +115,46 @@ def _decode_loop_pair(setup, run_a, run_b) -> tuple:
             np.asarray(state_b.tokens()), lat_b)
 
 
+def _traced_step(setup, workers: int):
+    """One traced decode step (after one untraced compile warmup): returns
+    the step's assembled :class:`~repro.obs.trace.RuntimeTrace`."""
+    import repro
+    from repro.models import build_decode_graph
+
+    decode_fn = setup[5]
+    state = _fresh_state(setup)
+    with repro.Session(workers, trace=True) as s:
+        s.run(build_decode_graph(state, decode_fn))   # jit compiles here
+        report = s.run(build_decode_graph(state, decode_fn))
+    return report.trace
+
+
 def bench_workers(setup, workers: int) -> Dict:
     import repro
 
+    fallback_steals = 0
+    replay_serves = 0
+
     with repro.Session(workers) as dyn, \
             repro.Session(workers, scheduler="pool") as pooled:
+        def run_pooled(g):
+            nonlocal fallback_steals, replay_serves
+            report = pooled.run(g)
+            if report.stats.get("pool_mode") == "replay":
+                replay_serves += 1
+                fallback_steals += report.stats["replay_stats"].get(
+                    "fallback_steals", 0)
+
         tok_dyn, lat_dyn, tok_pool, lat_pool = _decode_loop_pair(
             setup,
             lambda g: dyn.run(g),
-            lambda g: pooled.run(g))
+            run_pooled)
         stats = next(iter(pooled.pool.describe().values()))
     identical = bool((tok_dyn == tok_pool).all())
     assert identical, f"pooled replay diverged from dynamic at {workers} workers"
     assert stats["records"] == 1 and stats["warmups"] == 1, stats
     assert stats["replays"] + stats["rerecords"] == STEPS - 2, stats
+    trace = _traced_step(setup, workers)
     dyn_ms, pool_ms = _steady_ms(lat_dyn), _steady_ms(lat_pool)
     return {
         "bench": "serving", "arch": ARCH, "workers": workers, "shards": BATCH,
@@ -132,6 +165,15 @@ def bench_workers(setup, workers: int) -> Dict:
         "dynamic_tok_s": round(BATCH / (dyn_ms * 1e-3), 1),
         "pooled_tok_s": round(BATCH / (pool_ms * 1e-3), 1),
         "identical": identical,
+        # per-serve deviation counters (PoolRun.stats["replay_stats"]) —
+        # why a speedup<1 row happened, from the bench output alone
+        "replay_serves": replay_serves,
+        "fallback_steals": fallback_steals,
+        # flight-recorder probe: fraction of worker-time outside task
+        # bodies on one traced dynamic step (the collapse diagnostic)
+        "dispatch_overhead_fraction": round(
+            trace.metrics()["dispatch_overhead_fraction"], 3),
+        "_trace": trace,
     }
 
 
@@ -192,10 +234,29 @@ def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
         json.dump(out, fh, indent=1)
 
 
+def write_trace_json(rows: List[Dict], path: str = TRACE_PATH) -> None:
+    """Export the widest worker-count traced step as Perfetto JSON and
+    schema-validate it (the CI bench-smoke artifact)."""
+    from repro.obs import validate_trace_json, write_trace
+
+    traced = [r for r in rows if r.get("_trace") is not None]
+    if not traced:
+        return
+    row = max(traced, key=lambda r: r["workers"])
+    write_trace(row.pop("_trace"), path,
+                extra={"workers": row["workers"], "arch": ARCH})
+    for r in traced:
+        r.pop("_trace", None)
+    info = validate_trace_json(path)
+    print(f"# wrote {path} ({info['slices']} slices, {info['flows']} flows, "
+          f"schema {info['schema']})")
+
+
 def main():
     from .common import emit
 
     rows = bench()
+    write_trace_json(rows)
     emit([r for r in rows if r["bench"] == "serving"])
     print()
     emit([r for r in rows if r["bench"] == "serving_remap"])

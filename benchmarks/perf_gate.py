@@ -50,6 +50,9 @@ WINDOW = 40
 CONTRACTS: Dict[str, Tuple[str, str]] = {
     "warm_reuse": ("warm_ms", "fresh_ms"),
     "suspend_frames": ("suspend_ms", "blocking_ms"),
+    # the flight recorder's off-switch is free: tracing-off serving must
+    # be no slower than the same session tracing-on
+    "trace_off": ("off_ms", "on_ms"),
 }
 
 

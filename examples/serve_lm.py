@@ -42,7 +42,13 @@ def main():
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk GraphCache dir (pool): recordings persist "
                          "across processes / ship to replicas")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="serve with the flight recorder on and export the "
+                         "last decode step as Perfetto JSON here "
+                         "(open in https://ui.perfetto.dev)")
     args = ap.parse_args()
+    if args.trace and args.scheduler == "jit":
+        ap.error("--trace needs a task-graph scheduler (dynamic or pool)")
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -92,18 +98,28 @@ def main():
         cache_store = (GraphCache(args.cache_dir)
                        if args.cache_dir and args.scheduler == "pool" else None)
         session = repro.Session(args.workers, scheduler=args.scheduler,
-                                cache=cache_store)
+                                cache=cache_store, trace=bool(args.trace))
+        report = None
         with session:
             t0 = time.perf_counter()
             for _ in range(args.tokens - 1):
                 g = build_decode_graph(state, decode_fn)
-                session.run(g)
+                report = session.run(g)
             state.step_tokens.block_until_ready()
             t_decode = time.perf_counter() - t0
             gen = state.tokens()
             if args.scheduler == "pool":
                 for ckey, stats in session.pool.describe().items():
                     print(f"pool[{ckey[:20]}…]: {stats}")
+        if args.trace and report is not None and report.trace is not None:
+            from repro.obs import write_trace
+            write_trace(report.trace, args.trace,
+                        extra={"workers": args.workers, "arch": cfg.name,
+                               "scheduler": args.scheduler})
+            m = report.trace.metrics()
+            print(f"trace:   {args.trace} "
+                  f"(dispatch overhead {m['dispatch_overhead_fraction']:.1%}, "
+                  f"open in https://ui.perfetto.dev)")
 
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")

@@ -111,7 +111,12 @@ class RunReport:
     ``run_graph.last_recording``.  ``stats`` carries scheduler counters:
     dynamic runs report ``steals``/``frame_suspends``; replays report
     ``fallback_steals``/``stalls``/``skips``/``run_ahead``/
-    ``frame_suspends``; pool runs add the pool entry's serving counters.
+    ``frame_suspends``; pool runs add the pool entry's serving counters
+    plus ``pool_mode`` and (for replay serves) a ``replay_stats`` snapshot
+    explaining fallback-heavy rows.  ``trace`` is the run's assembled
+    :class:`~repro.obs.trace.RuntimeTrace` when the session was built with
+    ``trace=True`` (None otherwise) — feed it to
+    :func:`repro.obs.write_trace` for a Perfetto timeline.
     """
 
     results: Dict[int, Any]
@@ -121,6 +126,7 @@ class RunReport:
     scheduler: str
     n_workers: int
     stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    trace: Optional[Any] = None              # repro.obs.trace.RuntimeTrace
 
     def result(self, ref: Any) -> Any:
         """Result of a task, by :class:`~repro.api.graph.TaskHandle`,
@@ -277,7 +283,8 @@ class Session:
             if ex is None:
                 ex = ReplayExecutor(
                     recording, stall_timeout=self.stall_timeout,
-                    check_digest=False, core=self._leased_core())
+                    check_digest=False, trace=self.trace,
+                    core=self._leased_core())
                 ex.start()
                 self._executors[recording.digest] = ex
             return ex
@@ -291,6 +298,7 @@ class Session:
                 kwargs.setdefault("allow_remap", self.allow_remap)
                 kwargs.setdefault("stall_timeout", self.stall_timeout)
                 kwargs.setdefault("shared_cores", self.shared_cores)
+                kwargs.setdefault("trace", self.trace)
                 self._pool = ReplayPool(self.cache, **kwargs)
             return self._pool
 
@@ -414,7 +422,8 @@ class Session:
         stats = dict(rt.last_stats)
         return RunReport(results=results, plan=plan, recording=recording,
                          wall_s=0.0, scheduler=self.scheduler,
-                         n_workers=self.workers, stats=stats)
+                         n_workers=self.workers, stats=stats,
+                         trace=rt.last_trace)
 
     def _run_replay(self, plan: Plan, tg: TaskGraph,
                     timeout: float) -> RunReport:
@@ -437,7 +446,8 @@ class Session:
         results = ex.run(tg, timeout=timeout)
         return RunReport(results=results, plan=plan, recording=recording,
                          wall_s=0.0, scheduler=self.scheduler,
-                         n_workers=self.workers, stats=dict(ex.stats))
+                         n_workers=self.workers, stats=dict(ex.stats),
+                         trace=ex.last_trace)
 
     def _run_pool(self, plan: Plan, tg: TaskGraph,
                   timeout: float) -> RunReport:
@@ -450,4 +460,4 @@ class Session:
         return RunReport(results=outcome.results, plan=plan,
                          recording=outcome.recording, wall_s=0.0,
                          scheduler=self.scheduler, n_workers=self.workers,
-                         stats=stats)
+                         stats=stats, trace=getattr(outcome, "trace", None))

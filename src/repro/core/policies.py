@@ -53,6 +53,17 @@ class VictimPolicy:
     def record(self, victim: int, success: bool) -> None:
         raise NotImplementedError
 
+    def observe(self, metrics: dict) -> None:
+        """Cross-run feedback hook (flight-recorder data plumbing).
+
+        After every traced run the dispatch feeds each worker's policy the
+        assembled :meth:`repro.obs.RuntimeTrace.metrics` dict — notably
+        ``steal_by_victim`` (per-victim ``[attempts, hits]`` histograms)
+        and ``resume_latency`` — so a stats-driven policy can adapt across
+        a session's (or a :class:`~repro.replay.pool.ReplayPool` entry's)
+        lifetime.  The built-in paper policies ignore it; custom policies
+        registered via :func:`register_policy` override this."""
+
     def clone_for(self, worker_id: int) -> "VictimPolicy":
         return type(self)(worker_id, self.n_workers, self._seed)
 

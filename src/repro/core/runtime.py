@@ -91,7 +91,9 @@ class Runtime:
         self._dispatch = DynamicDispatch(
             n_workers, policy=policy, gang_default=gang_default, seed=seed,
             steal_backoff=steal_backoff, trace=trace)
-        self.trace = self._dispatch.trace
+        #: assembled :class:`~repro.obs.trace.RuntimeTrace` of the most
+        #: recent traced run (None with ``trace=False``)
+        self.last_trace = None
         self.last_recording = None
 
     # ------------------------------------------------------------------
@@ -145,6 +147,11 @@ class Runtime:
             return results
         finally:
             self._dispatch.set_recording(False)
+            if self.trace_enabled:
+                # assemble in the finally so deadlocked/failed runs still
+                # leave their flight-recorder evidence behind
+                self.last_trace = self._dispatch.take_trace()
+                self._dispatch.apply_feedback(self.last_trace)
 
     # ------------------------------------------------------------------
     # parallel regions (called from task bodies via ctx.parallel)

@@ -33,7 +33,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 from .gang import GangState, is_eligible_to_sched
 from .policies import VictimPolicy, make_policy
 from .taskgraph import ParallelSpec, Task, TaskGraph
-from .tracing import Trace
+from .tracing import KIND_BARRIER, KIND_COMM, Trace
 
 
 class DeadlockError(RuntimeError):
@@ -323,7 +323,7 @@ class Simulator:
         dur = task.cost
         if self.mode == "oversubscribe" and w.co_resident > 0:
             dur = dur * (1 + w.co_resident) + self.ctx_switch * w.co_resident
-        if self.locality_penalty and task.kind not in ("comm",):
+        if self.locality_penalty and task.kind != KIND_COMM:
             family = (task.kind, task.meta.get("step"))
             if w.last_family is not None and family != w.last_family:
                 dur *= 1.0 + self.locality_penalty
@@ -439,14 +439,10 @@ class Simulator:
     def _wake_parked(self, ult: _ULTJob, t: float) -> None:
         region = ult.region
         w = self.workers[ult.worker]
-        if (self.mode == "ult_naive" and region.spec.blocking) or self.mode == "oversubscribe":
-            self._record(w.wid, ult.park_t, t, "barrier", ult.name)
-            if self.mode == "ult_naive":
-                w.blocked = False
-            self._advance_ult(w, ult, t)
-        else:
-            self._record(w.wid, ult.park_t, t, "barrier", ult.name)
-            self._advance_ult(w, ult, t)
+        self._record(w.wid, ult.park_t, t, KIND_BARRIER, ult.name)
+        if self.mode == "ult_naive" and region.spec.blocking:
+            w.blocked = False
+        self._advance_ult(w, ult, t)
 
     def _advance_ult(self, w: _Worker, ult: _ULTJob, t: float) -> None:
         region = ult.region

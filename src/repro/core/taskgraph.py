@@ -35,6 +35,7 @@ the record-and-replay subsystem uses to reproduce frame interleavings.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import weakref
 from collections import deque
@@ -53,6 +54,11 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 # past it: wakeups are expected to come from the run's own work.
 _epoch_lock = threading.Lock()
 _activity_epoch = 0
+
+# Process-wide monotonic ids for communication primitives: names are user-
+# chosen and may collide, so the flight recorder tags suspend/block events
+# with the uid (``recv(chan)@c7``) to tell same-named channels apart.
+_prim_uids = itertools.count()
 
 
 def _bump_activity() -> None:
@@ -98,7 +104,7 @@ class Channel:
     not global.
     """
 
-    __slots__ = ("name", "capacity", "_lock", "_items", "_waiters",
+    __slots__ = ("name", "capacity", "uid", "_lock", "_items", "_waiters",
                  "_send_waiters")
 
     def __init__(self, name: str = "channel", capacity: Optional[int] = None):
@@ -106,6 +112,7 @@ class Channel:
             raise ValueError(f"channel capacity must be >= 1, got {capacity}")
         self.name = name
         self.capacity = capacity
+        self.uid = next(_prim_uids)
         self._lock = threading.Lock()
         self._items: Deque[Any] = deque()
         self._waiters: Deque[Callable[[Any], None]] = deque()
@@ -242,10 +249,11 @@ class TaskEvent:
     waits return immediately.
     """
 
-    __slots__ = ("name", "_lock", "_set", "_waiters")
+    __slots__ = ("name", "uid", "_lock", "_set", "_waiters")
 
     def __init__(self, name: str = "event"):
         self.name = name
+        self.uid = next(_prim_uids)
         self._lock = threading.Lock()
         self._set = False
         self._waiters: Deque[Callable[[Any], None]] = deque()
@@ -302,6 +310,11 @@ class FrameRequest:
     def describe(self) -> str:
         return self.kind
 
+    def source_uid(self) -> int:
+        """Uid of the primitive this request waits on (-1 when it has none
+        or several) — the flight recorder's channel-identity tag."""
+        return -1
+
 
 class RecvRequest(FrameRequest):
     kind = "recv"
@@ -322,6 +335,9 @@ class RecvRequest(FrameRequest):
     def describe(self) -> str:
         return f"recv({self.channel.name})"
 
+    def source_uid(self) -> int:
+        return self.channel.uid
+
 
 class WaitRequest(FrameRequest):
     kind = "wait"
@@ -341,6 +357,9 @@ class WaitRequest(FrameRequest):
 
     def describe(self) -> str:
         return f"wait({self.event.name})"
+
+    def source_uid(self) -> int:
+        return self.event.uid
 
 
 class SendRequest(FrameRequest):
@@ -365,6 +384,9 @@ class SendRequest(FrameRequest):
 
     def describe(self) -> str:
         return f"send({self.channel.name})"
+
+    def source_uid(self) -> int:
+        return self.channel.uid
 
 
 class WaitAnyRequest(FrameRequest):
@@ -509,6 +531,9 @@ class _PinnedChoice(FrameRequest):
 
     def describe(self) -> str:
         return f"wait_any[{self.index}]({self.request.describe()})"
+
+    def source_uid(self) -> int:
+        return self.request.source_uid()
 
 
 class YieldRequest(FrameRequest):

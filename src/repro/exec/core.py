@@ -43,6 +43,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 from ..core.simulator import DeadlockError
 from ..core.taskgraph import TaskGraph
+from ..core.tracing import EV_BARRIER_DONE, EV_BARRIER_WAIT, EV_DEADLOCK_POLL
+from ..obs.recorder import NULL_RECORDER
 
 
 class GangRegion:
@@ -100,6 +102,8 @@ class GangRegion:
                 self.cv.notify_all()
                 return
             core.enter_blocked()
+            w = core.worker_id(default=-1)
+            core.recorder.emit(w, EV_BARRIER_WAIT, "", self.rid)
             try:
                 while self.barrier_round == my_round:
                     if core.aborted:
@@ -107,6 +111,7 @@ class GangRegion:
                     if not self.cv.wait(timeout=core.block_poll):
                         core.check_deadlock()
             finally:
+                core.recorder.emit(w, EV_BARRIER_DONE, "", self.rid)
                 core.exit_blocked()
 
     # -- claim slots (replay owners / dynamic+replay fallback helpers) ------
@@ -258,6 +263,10 @@ class ExecutorCore:
         self._started = False
         self._shutdown = False
         self._tls = threading.local()
+        # flight recorder of the dispatch currently running on this core;
+        # reset to the no-op singleton between runs so a shared registry
+        # core never keeps a trace buffer alive past its session
+        self.recorder = NULL_RECORDER
 
         # run lifecycle: workers park on _gen_cv between runs
         self._gen_cv = threading.Condition()
@@ -389,6 +398,7 @@ class ExecutorCore:
         and are never counted as hard-blocked; frames suspended on a
         channel/event are soft-blocked (their worker is free) and never
         count either — they appear in the message only as context."""
+        self.recorder.emit(self.worker_id(default=-1), EV_DEADLOCK_POLL)
         if self.aborted:
             # the run is already tearing down: barrier waiters drain their
             # enter_blocked accounting on the way out, and a transiently
@@ -469,6 +479,7 @@ class ExecutorCore:
             run_state = self._run_state = _RunState()
             dispatch.bind(self)
             dispatch.begin_run(graph)
+            self.recorder = getattr(dispatch, "recorder", NULL_RECORDER)
             self._dispatch = dispatch
             self._workers_idle = 0
             self._generation += 1
@@ -478,26 +489,29 @@ class ExecutorCore:
         # core the next run may install (and reset self._run_state) as soon
         # as this run's workers go idle
         deadline = time.monotonic() + timeout
-        with self._done_cv:
-            while not dispatch.drained:
-                if (self._shutdown or run_state.deadlock is not None
-                        or run_state.failure is not None):
-                    break
-                if not self._done_cv.wait(timeout=0.05):
-                    if time.monotonic() > deadline:
-                        run_state.failure = TimeoutError(
-                            f"graph {graph.name!r} did not finish within "
-                            f"{timeout}s")
+        try:
+            with self._done_cv:
+                while not dispatch.drained:
+                    if (self._shutdown or run_state.deadlock is not None
+                            or run_state.failure is not None):
                         break
-        if self._shutdown and not dispatch.drained:
-            dispatch.drain_frames()
-            raise RuntimeError("executor core was shut down mid-run")
-        if run_state.deadlock is not None:
-            dispatch.drain_frames()
-            raise DeadlockError(run_state.deadlock)
-        if run_state.failure is not None:
-            failure = run_state.failure
-            dispatch.wake_all()
-            dispatch.drain_frames()
-            raise failure
-        return dispatch.results()
+                    if not self._done_cv.wait(timeout=0.05):
+                        if time.monotonic() > deadline:
+                            run_state.failure = TimeoutError(
+                                f"graph {graph.name!r} did not finish within "
+                                f"{timeout}s")
+                            break
+            if self._shutdown and not dispatch.drained:
+                dispatch.drain_frames()
+                raise RuntimeError("executor core was shut down mid-run")
+            if run_state.deadlock is not None:
+                dispatch.drain_frames()
+                raise DeadlockError(run_state.deadlock)
+            if run_state.failure is not None:
+                failure = run_state.failure
+                dispatch.wake_all()
+                dispatch.drain_frames()
+                raise failure
+            return dispatch.results()
+        finally:
+            self.recorder = NULL_RECORDER

@@ -62,7 +62,21 @@ from ..core.taskgraph import (
     note_parked,
     note_unparked,
 )
-from ..core.tracing import Trace
+from ..core.tracing import (
+    EV_BLOCK,
+    EV_DEADLOCK_POLL,
+    EV_FRAME_WAKE,
+    EV_GANG_ENTER,
+    EV_GANG_EXIT,
+    EV_GANG_RESERVE,
+    EV_PARK,
+    EV_STEAL_ATTEMPT,
+    EV_STEAL_HIT,
+    EV_TASK_END,
+    EV_UNBLOCK,
+    EV_WAKE,
+)
+from ..obs.recorder import NULL_RECORDER, FlightRecorder
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
 
@@ -102,7 +116,9 @@ class DynamicDispatch(DispatchStrategy):
         self.seed = seed
         self.steal_backoff = steal_backoff
         self.trace_enabled = trace
-        self.trace = Trace(n_workers)
+        # flight recorder: hot paths call emit unconditionally — with
+        # tracing off this is the no-op singleton (one attribute call)
+        self.recorder = FlightRecorder(n_workers) if trace else NULL_RECORDER
 
         self._fork_lock = threading.Lock()          # the paper's fork-phase lock
         self.gang_state = GangState(n_workers)
@@ -155,7 +171,8 @@ class DynamicDispatch(DispatchStrategy):
         self._rec_wait_choices: Dict[Tuple[int, int], int] = {}
 
         # always-on lightweight run counters (surfaced in RunReport.stats)
-        self.run_stats: Dict[str, int] = {"steals": 0, "frame_suspends": 0}
+        self.run_stats: Dict[str, int] = {
+            "steals": 0, "steal_attempts": 0, "frame_suspends": 0}
 
     # ------------------------------------------------------------------
     # DispatchStrategy interface
@@ -197,7 +214,9 @@ class DynamicDispatch(DispatchStrategy):
             self._rec_forks = []
             self._rec_comms = []
             self._rec_wait_choices = {}
-        self.run_stats = {"steals": 0, "frame_suspends": 0}
+        self.run_stats = {"steals": 0, "steal_attempts": 0,
+                          "frame_suspends": 0}
+        self.recorder.begin_run()
         # master thread (worker 0's queue) receives the roots
         for t in graph.roots():
             self._locals[0].append(t)
@@ -228,15 +247,24 @@ class DynamicDispatch(DispatchStrategy):
 
     def worker_loop(self, w: int) -> None:
         core = self.core
+        emit = self.recorder.emit
+        idle = False   # park/wake events on transitions only (no flood)
         while not self.drained and not core.aborted:
             progressed = self.schedule_once(w)
-            if not progressed:
-                with self._work_available:
-                    if self.drained or core.aborted:
-                        return
-                    self._work_available.wait(timeout=self.steal_backoff * 50)
-                if not self.drained and not core.aborted:
-                    self._check_no_progress()
+            if progressed:
+                if idle:
+                    idle = False
+                    emit(w, EV_WAKE)
+                continue
+            if not idle:
+                idle = True
+                emit(w, EV_PARK)
+            with self._work_available:
+                if self.drained or core.aborted:
+                    return
+                self._work_available.wait(timeout=self.steal_backoff * 50)
+            if not self.drained and not core.aborted:
+                self._check_no_progress()
 
     def _active_workers(self) -> int:
         """Workers that can still make progress on their own: executing a
@@ -263,6 +291,7 @@ class DynamicDispatch(DispatchStrategy):
         suspended, stalled = core.suspended_frames, sum(self._stalled)
         if suspended <= 0 and stalled == 0:
             return
+        self.recorder.emit(core.worker_id(default=-1), EV_DEADLOCK_POLL)
         resume_epoch, act_epoch = core.resume_epoch, activity_epoch()
         time.sleep(core.block_poll)
         if (not self.drained and not core.aborted
@@ -350,6 +379,8 @@ class DynamicDispatch(DispatchStrategy):
         victim = pol.select()
         got: Any = None
         if victim != w:
+            self.run_stats["steal_attempts"] += 1
+            self.recorder.emit(w, EV_STEAL_ATTEMPT, "", victim)
             got = self._pop_gang(w, victim)
             if got is None:
                 got = self._pop_resume(victim)
@@ -370,10 +401,13 @@ class DynamicDispatch(DispatchStrategy):
             if entry is not None:
                 self._rec_steals[w].append((victim, entry))
         if isinstance(got, _GangULT):
+            self.recorder.emit(w, EV_STEAL_HIT, "gang", victim)
             self._run_gang_ult(w, got)
         elif isinstance(got, TaskFrame):
+            self.recorder.emit(w, EV_STEAL_HIT, "frame", victim)
             self._run_frame_segment(w, got)
         else:
+            self.recorder.emit(w, EV_STEAL_HIT, "task", victim)
             self._run_task(w, got)
         return True
 
@@ -386,7 +420,7 @@ class DynamicDispatch(DispatchStrategy):
         self._depth[w] -= 1
 
     def _run_task(self, w: int, task: Task) -> None:
-        t0 = time.perf_counter()
+        self.recorder.emit_task_start(w, task)
         if self._recording:
             # per-worker list, appended only by worker w: start order, no lock
             self._rec_entries[w].append(task.tid)
@@ -407,13 +441,11 @@ class DynamicDispatch(DispatchStrategy):
                 ctx._in_frame = True
                 frame = TaskFrame(task, ctx, result)
                 frame.last_worker = w
-                self._advance_frame(w, frame, t0)
+                self._advance_frame(w, frame)
                 return
         finally:
             self._end_unit(w)
-        t1 = time.perf_counter()
-        if self.trace_enabled:
-            self.trace.record(w, t0, t1, task.kind, task.name)
+        self.recorder.emit(w, EV_TASK_END, "", task.tid)
         with self._results_lock:
             self._results[task.tid] = result
         self._complete(w, task)
@@ -424,18 +456,18 @@ class DynamicDispatch(DispatchStrategy):
         """Execute one resume segment of a frame popped off a resume deque
         (possibly stolen — ``w`` need not be ``frame.last_worker``)."""
         frame.resumes += 1
+        self.recorder.emit_frame_resume(w, frame)
         if self._recording:
             self._rec_entries[w].append(FrameResume(frame.task.tid, frame.resumes))
         frame.ctx.worker_id = w  # type: ignore[attr-defined]
         frame.last_worker = w
-        t0 = time.perf_counter()
         self._begin_unit(w)
         try:
-            self._advance_frame(w, frame, t0)
+            self._advance_frame(w, frame)
         finally:
             self._end_unit(w)
 
-    def _advance_frame(self, w: int, frame: TaskFrame, t0: float) -> None:
+    def _advance_frame(self, w: int, frame: TaskFrame) -> None:
         """Drive the generator until it completes or must park.  Without
         recording, immediately satisfiable requests (non-empty channel, set
         event) are consumed inline; with recording on, every request parks
@@ -450,9 +482,7 @@ class DynamicDispatch(DispatchStrategy):
                 core.fail(e)
                 return
             if status == "done":
-                t1 = time.perf_counter()
-                if self.trace_enabled:
-                    self.trace.record(w, t0, t1, frame.task.kind, frame.task.name)
+                self.recorder.emit(w, EV_TASK_END, "", frame.task.tid)
                 with self._results_lock:
                     self._results[frame.task.tid] = payload
                 self._complete(w, frame.task)
@@ -462,9 +492,6 @@ class DynamicDispatch(DispatchStrategy):
                 ok, value = request.try_immediate()
                 if ok:
                     continue
-            if self.trace_enabled:
-                self.trace.record(w, t0, time.perf_counter(), frame.task.kind,
-                                  f"{frame.task.name}~{request.kind}")
             self._park_frame(w, frame, request)
             return
 
@@ -482,6 +509,7 @@ class DynamicDispatch(DispatchStrategy):
         note_parked(frame)
         core.note_frame_suspended()
         self.run_stats["frame_suspends"] += 1
+        self.recorder.emit_frame_suspend(w, frame, request)
         status, value = request.park(waker)
         if status == "ready":
             # the primitive was already satisfied (or this is a plain
@@ -509,6 +537,10 @@ class DynamicDispatch(DispatchStrategy):
         frame.request = None
         frame.waker = None
         self.core.note_frame_resumed()
+        # the waker may be any thread (a worker mid-send or an external
+        # caller) — worker -1 routes to the recorder's external ring
+        self.recorder.emit(self.core.worker_id(default=-1), EV_FRAME_WAKE,
+                           "", frame.task.tid, frame.resumes + 1)
         target = frame.last_worker
         with self._resume_locks[target]:
             self._resume_deqs[target].append(frame)
@@ -590,6 +622,7 @@ class DynamicDispatch(DispatchStrategy):
             if self._recording and spawn_task is not None:
                 # fork lock => globally ordered by gang id (issue order)
                 self._rec_forks.append((spawn_task.tid, gang_id, n_threads))
+            self.recorder.emit(w, EV_GANG_RESERVE, "", region.rid, n_threads)
             if use_gang:
                 reserved = self.gang_state.get_workers(w, n_threads)
                 self.gang_state.account_gang(
@@ -629,29 +662,32 @@ class DynamicDispatch(DispatchStrategy):
     # ------------------------------------------------------------------
     # plain-body blocking communication (work-conserving kernel-thread wait)
     def ctx_recv(self, channel: Channel, ctx: TaskContext) -> Any:
-        return self._blocking_wait(channel.try_recv)
+        return self._blocking_wait(channel.try_recv, "recv", channel.uid)
 
     def ctx_wait(self, event: TaskEvent, ctx: TaskContext) -> None:
         self._blocking_wait(
-            lambda: ((True, None) if event.is_set() else (False, None)))
+            lambda: ((True, None) if event.is_set() else (False, None)),
+            "wait", event.uid)
 
     def ctx_send(self, channel: Channel, value: Any, ctx: TaskContext) -> None:
         """Plain-body backpressured send: block work-conservingly until the
         bounded channel has a slot (unbounded channels succeed at once)."""
         self._blocking_wait(
             lambda: ((True, None) if channel.try_send(value)
-                     else (False, None)))
+                     else (False, None)),
+            "send", channel.uid)
 
     def ctx_wait_any(self, request: WaitAnyRequest, ctx: TaskContext) -> Any:
         """Plain-body select: poll the sources work-conservingly; returns
         ``(index, value)`` of the first satisfied one."""
-        return self._blocking_wait(request.try_immediate)
+        return self._blocking_wait(request.try_immediate, "wait_any")
 
     def ctx_yield(self, ctx: TaskContext) -> None:
         """Plain-body cooperative scheduling point: serve one unit inline."""
         self.schedule_once(self.core.worker_id())
 
-    def _blocking_wait(self, poll: Callable[[], Tuple[bool, Any]]) -> Any:
+    def _blocking_wait(self, poll: Callable[[], Tuple[bool, Any]],
+                       what: str = "", uid: int = -1) -> Any:
         """Block a plain (non-generator) body until ``poll`` succeeds.  The
         worker is NOT hard-blocked: it keeps serving other work at this
         scheduling point (Python cannot switch ULT stacks, so this is the
@@ -661,45 +697,73 @@ class DynamicDispatch(DispatchStrategy):
         satisfy raises DeadlockError instead of hanging."""
         core = self.core
         w = core.worker_id()
-        while True:
-            ok, value = poll()
-            if ok:
-                return value
-            if core.aborted:
-                raise DeadlockError(core.abort_reason())
-            if self.schedule_once(w):
-                continue
-            self._stalled[w] = True
-            try:
-                with self._work_available:
-                    self._work_available.wait(timeout=self.steal_backoff * 50)
+        ok, value = poll()
+        if ok:    # satisfied immediately: no block window, no events
+            return value
+        emit = self.recorder.emit
+        emit(w, EV_BLOCK, what, uid)
+        try:
+            while True:
                 ok, value = poll()
                 if ok:
                     return value
-                self._check_no_progress()
-            finally:
-                self._stalled[w] = False
+                if core.aborted:
+                    raise DeadlockError(core.abort_reason())
+                if self.schedule_once(w):
+                    continue
+                self._stalled[w] = True
+                try:
+                    with self._work_available:
+                        self._work_available.wait(
+                            timeout=self.steal_backoff * 50)
+                    ok, value = poll()
+                    if ok:
+                        return value
+                    self._check_no_progress()
+                finally:
+                    self._stalled[w] = False
+        finally:
+            emit(w, EV_UNBLOCK, "", uid)
 
     def _run_gang_ult(self, w: int, ult: _GangULT) -> None:
         region = ult.region
         if self._recording and region.spawn_task is not None:
             self._rec_entries[w].append((region.spawn_tid, ult.thread_num))
         self._contexts[w].append((region.gang_id, region.nest_level))
-        t0 = time.perf_counter()
+        self.recorder.emit(w, EV_GANG_ENTER, "", region.rid, ult.thread_num)
         try:
             result = region.body(ult.thread_num, region)
         except BaseException as e:  # noqa: BLE001
             self.core.fail(e)
             return
         finally:
+            self.recorder.emit(w, EV_GANG_EXIT, "", region.rid,
+                               ult.thread_num)
             self._contexts[w].pop()
             if region.gang_id >= 0:
                 with self._fork_lock:
                     self.gang_state.release_gang_thread(w)
-        t1 = time.perf_counter()
-        if self.trace_enabled:
-            self.trace.record(w, t0, t1, "panel", f"r{region.rid}.t{ult.thread_num}")
         region.thread_done(ult.thread_num, result)
+
+    # ------------------------------------------------------------------
+    # flight-recorder assembly + victim-policy feedback (ROADMAP item 4)
+    def take_trace(self):
+        """Assemble the last run's events into a
+        :class:`~repro.obs.trace.RuntimeTrace` (``None`` with tracing off)."""
+        if not self.trace_enabled:
+            return None
+        from ..obs.trace import RuntimeTrace
+        return RuntimeTrace.from_recorder(self.recorder)
+
+    def apply_feedback(self, trace) -> None:
+        """Feed an assembled trace's metrics (per-victim steal histograms,
+        resume latency) to every worker's victim policy — the data plumbing
+        stats-driven policies hook via ``VictimPolicy.observe``."""
+        if trace is None:
+            return
+        metrics = trace.metrics()
+        for pol in self._policies:
+            pol.observe(metrics)
 
     # ------------------------------------------------------------------
     # recording assembly (record-and-replay, repro.replay)

@@ -70,6 +70,23 @@ from ..core.taskgraph import (
     note_parked,
     note_unparked,
 )
+from ..core.tracing import (
+    EV_BLOCK,
+    EV_DEADLOCK_POLL,
+    EV_FRAME_WAKE,
+    EV_GANG_ENTER,
+    EV_GANG_EXIT,
+    EV_GANG_RESERVE,
+    EV_PARK,
+    EV_REPLAY_FALLBACK,
+    EV_REPLAY_SKIP,
+    EV_REPLAY_STALL,
+    EV_RUN_AHEAD,
+    EV_TASK_END,
+    EV_UNBLOCK,
+    EV_WAKE,
+)
+from ..obs.recorder import NULL_RECORDER, FlightRecorder
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
 if TYPE_CHECKING:  # avoid a circular import at load time (exec <-> replay)
@@ -85,11 +102,15 @@ class ReplayDispatch(DispatchStrategy):
 
     _RUN_AHEAD_WINDOW = 32
 
-    def __init__(self, recording: "Recording", *, stall_timeout: float = 1e-3):
+    def __init__(self, recording: "Recording", *, stall_timeout: float = 1e-3,
+                 trace: bool = False):
         self.core: Optional[ExecutorCore] = None
         self.recording = recording
         self.n_workers = recording.n_workers
         self.stall_timeout = stall_timeout
+        self.trace_enabled = trace
+        self.recorder = (FlightRecorder(recording.n_workers) if trace
+                         else NULL_RECORDER)
 
         n = self.n_workers
         self._orders = [list(o) for o in recording.worker_orders]
@@ -171,6 +192,7 @@ class ReplayDispatch(DispatchStrategy):
         self.stats = {"fallback_steals": 0, "stalls": 0, "skips": 0,
                       "run_ahead": 0, "frame_suspends": 0}
         self.issued_gang_ids = []
+        self.recorder.begin_run()
 
     @property
     def drained(self) -> bool:
@@ -199,8 +221,10 @@ class ReplayDispatch(DispatchStrategy):
         core = self.core
         order = self._orders[w]
         cv = self._worker_cvs[w]
+        emit = self.recorder.emit
         idx = 0
         stalled = False
+        idle = False   # park/wake events on transitions only (no flood)
         while idx < len(order):
             if core.aborted:
                 return
@@ -214,19 +238,32 @@ class ReplayDispatch(DispatchStrategy):
             if advanced:
                 idx += 1
                 stalled = False
+                if idle:
+                    idle = False
+                    emit(w, EV_WAKE)
                 continue
             # next recorded entry not ready: stay work-conserving without
             # parking — run a later ready entry of our *own* list (claims
             # and counters gate correctness; the list order is a schedule
             # hint, not a constraint)
             if self._run_ahead(w, order, idx + 1):
+                if idle:
+                    idle = False
+                    emit(w, EV_WAKE)
                 continue
             # nothing of ours is ready: wait one stall window, then start
             # stealing dynamically (cost drift / stale recording)
             if stalled:
                 self.stats["stalls"] += 1
+                emit(w, EV_REPLAY_STALL, "", idx)
                 if self._fallback_once(w):
+                    if idle:
+                        idle = False
+                        emit(w, EV_WAKE)
                     continue
+            if not idle:
+                idle = True
+                emit(w, EV_PARK)
             # Dekker-style handoff with completers: set the waiting flag,
             # THEN re-check readiness.  A completer sets ready, THEN reads
             # the flag — under the GIL one of the two always observes the
@@ -247,11 +284,16 @@ class ReplayDispatch(DispatchStrategy):
             with cv:
                 if self.drained:
                     break
+                if not idle:
+                    idle = True
+                    emit(w, EV_PARK)
                 self._waiting[w] = True
                 cv.wait(timeout=self.stall_timeout)
                 self._waiting[w] = False
             if not self.drained and not core.aborted:
-                self._fallback_once(w)
+                if self._fallback_once(w) and idle:
+                    idle = False
+                    emit(w, EV_WAKE)
 
     def _run_ahead(self, w: int, order, start: int) -> bool:
         """Execute one ready-but-unclaimed later entry of our own run list
@@ -267,6 +309,7 @@ class ReplayDispatch(DispatchStrategy):
                     and e not in self._placements):
                 if self._claims.setdefault(e, w) != w:
                     continue
+                self.recorder.emit(w, EV_RUN_AHEAD, "", e)
                 self._execute(w, self._graph.tasks[e])
                 self.stats["run_ahead"] += 1
                 return True
@@ -292,6 +335,7 @@ class ReplayDispatch(DispatchStrategy):
             # it; safe to move on, whoever claimed it completes it
             if not self._done[tid]:
                 self.stats["skips"] += 1
+                self.recorder.emit(w, EV_REPLAY_SKIP, "", tid)
             return True
         if not self._ready[tid]:
             return False
@@ -308,6 +352,7 @@ class ReplayDispatch(DispatchStrategy):
         if key in self._claims:
             if not self._done[tid]:
                 self.stats["skips"] += 1     # a fallback helper took our slot
+                self.recorder.emit(w, EV_REPLAY_SKIP, "", tid, seg)
             return True
         if self._done[tid]:
             return True                      # frame already ran to completion
@@ -346,6 +391,8 @@ class ReplayDispatch(DispatchStrategy):
                 continue
             i = region.claim_any()
             if i is not None:
+                self.recorder.emit(w, EV_REPLAY_FALLBACK, "gang",
+                                   region.spawn_tid, i)
                 self._run_ult(w, region, i)
                 self.stats["fallback_steals"] += 1
                 return True
@@ -359,6 +406,7 @@ class ReplayDispatch(DispatchStrategy):
             if not self._take_resumable(frame, seg):
                 continue
             self._claims.setdefault((tid, seg), w)
+            self.recorder.emit(w, EV_REPLAY_FALLBACK, "frame", tid, seg)
             self._resume_segment(w, frame)
             self.stats["fallback_steals"] += 1
             return True
@@ -377,6 +425,7 @@ class ReplayDispatch(DispatchStrategy):
                         continue
                 if self._claims.setdefault(tid, w) != w:
                     continue
+                self.recorder.emit(w, EV_REPLAY_FALLBACK, "task", tid)
                 self._execute(w, self._graph.tasks[tid])
                 self.stats["fallback_steals"] += 1
                 return True
@@ -385,6 +434,7 @@ class ReplayDispatch(DispatchStrategy):
     # ------------------------------------------------------------------
     # execution
     def _execute(self, w: int, task: Task) -> None:
+        self.recorder.emit_task_start(w, task)
         ctx = TaskContext(self._graph, task, self._results, runtime=self)
         ctx.worker_id = w  # type: ignore[attr-defined]
         self._depth[w] += 1
@@ -403,6 +453,7 @@ class ReplayDispatch(DispatchStrategy):
                 return
         finally:
             self._depth[w] -= 1
+        self.recorder.emit(w, EV_TASK_END, "", task.tid)
         self._results[task.tid] = result
         self._complete(w, task)
 
@@ -419,6 +470,7 @@ class ReplayDispatch(DispatchStrategy):
 
     def _resume_segment(self, w: int, frame: TaskFrame) -> None:
         frame.resumes += 1
+        self.recorder.emit_frame_resume(w, frame)
         frame.ctx.worker_id = w  # type: ignore[attr-defined]
         frame.last_worker = w
         self._depth[w] += 1
@@ -432,6 +484,7 @@ class ReplayDispatch(DispatchStrategy):
         frame.resume_value = None
         status, payload = frame.step(value)
         if status == "done":
+            self.recorder.emit(w, EV_TASK_END, "", frame.task.tid)
             self._results[frame.task.tid] = payload
             self._complete(w, frame.task)
             return
@@ -457,6 +510,7 @@ class ReplayDispatch(DispatchStrategy):
         note_parked(frame)
         core.note_frame_suspended()
         self.stats["frame_suspends"] += 1
+        self.recorder.emit_frame_suspend(w, frame, request)
         status, value = request.park(waker)
         if status == "ready":
             waker(value)
@@ -477,6 +531,10 @@ class ReplayDispatch(DispatchStrategy):
         with self._frame_gate:
             frame.resumable = True
         self.core.note_frame_resumed()
+        # the waker may be any thread (a worker mid-send or an external
+        # caller) — worker -1 routes to the recorder's external ring
+        self.recorder.emit(self.core.worker_id(default=-1), EV_FRAME_WAKE,
+                           "", tid, frame.resumes + 1)
         owner = self._resume_owner.get((tid, frame.resumes + 1))
         if owner == self.core.worker_id(default=-1):
             return     # waking ourselves (send landed while we parked): we
@@ -507,43 +565,53 @@ class ReplayDispatch(DispatchStrategy):
     # plain-body blocking communication (mirrors DynamicDispatch semantics:
     # the worker helps through the fallback path instead of idling)
     def ctx_recv(self, channel: Channel, ctx: TaskContext) -> Any:
-        return self._blocking_wait(channel.try_recv)
+        return self._blocking_wait(channel.try_recv, "recv", channel.uid)
 
     def ctx_wait(self, event: TaskEvent, ctx: TaskContext) -> None:
         self._blocking_wait(
-            lambda: ((True, None) if event.is_set() else (False, None)))
+            lambda: ((True, None) if event.is_set() else (False, None)),
+            "wait", event.uid)
 
     def ctx_send(self, channel: Channel, value: Any, ctx: TaskContext) -> None:
         self._blocking_wait(
             lambda: ((True, None) if channel.try_send(value)
-                     else (False, None)))
+                     else (False, None)),
+            "send", channel.uid)
 
     def ctx_wait_any(self, request: WaitAnyRequest, ctx: TaskContext) -> Any:
-        return self._blocking_wait(request.try_immediate)
+        return self._blocking_wait(request.try_immediate, "wait_any")
 
     def ctx_yield(self, ctx: TaskContext) -> None:
         self._fallback_once(self.core.worker_id())
 
-    def _blocking_wait(self, poll) -> Any:
+    def _blocking_wait(self, poll, what: str = "", uid: int = -1) -> Any:
         core = self.core
         w = core.worker_id()
-        while True:
-            ok, value = poll()
-            if ok:
-                return value
-            if core.aborted:
-                raise DeadlockError(core.abort_reason())
-            if self._fallback_once(w):
-                continue
-            self._stalled[w] = True
-            try:
-                time.sleep(self.stall_timeout)
+        ok, value = poll()
+        if ok:    # satisfied immediately: no block window, no events
+            return value
+        emit = self.recorder.emit
+        emit(w, EV_BLOCK, what, uid)
+        try:
+            while True:
                 ok, value = poll()
                 if ok:
                     return value
-                self._check_no_progress()
-            finally:
-                self._stalled[w] = False
+                if core.aborted:
+                    raise DeadlockError(core.abort_reason())
+                if self._fallback_once(w):
+                    continue
+                self._stalled[w] = True
+                try:
+                    time.sleep(self.stall_timeout)
+                    ok, value = poll()
+                    if ok:
+                        return value
+                    self._check_no_progress()
+                finally:
+                    self._stalled[w] = False
+        finally:
+            emit(w, EV_UNBLOCK, "", uid)
 
     def _active_workers(self) -> int:
         return sum(1 for w in range(self.n_workers)
@@ -558,6 +626,7 @@ class ReplayDispatch(DispatchStrategy):
         core = self.core
         if self.drained or core.aborted or self._active_workers() > 0:
             return
+        self.recorder.emit(core.worker_id(default=-1), EV_DEADLOCK_POLL)
         before = (len(self._completed), core.resume_epoch, activity_epoch())
         time.sleep(core.block_poll)
         if (not self.drained and not core.aborted
@@ -569,6 +638,16 @@ class ReplayDispatch(DispatchStrategy):
                 f"deadlock: {sum(self._stalled)} worker(s) blocked in "
                 "task-body recv/wait during replay with no progress left "
                 "in the run")
+
+    # ------------------------------------------------------------------
+    # flight-recorder assembly
+    def take_trace(self):
+        """Assemble the last run's events into a
+        :class:`~repro.obs.trace.RuntimeTrace` (``None`` with tracing off)."""
+        if not self.trace_enabled:
+            return None
+        from ..obs.trace import RuntimeTrace
+        return RuntimeTrace.from_recorder(self.recorder)
 
     def _complete(self, w: int, task: Task) -> None:
         self._done[task.tid] = True
@@ -599,11 +678,15 @@ class ReplayDispatch(DispatchStrategy):
                     cv.notify_all()
 
     def _run_ult(self, w: int, region: GangRegion, thread_num: int) -> None:
+        # replay regions carry no rid; key gang spans by spawning task
+        rid = region.rid if region.rid >= 0 else region.spawn_tid
+        self.recorder.emit(w, EV_GANG_ENTER, "", rid, thread_num)
         self._depth[w] += 1
         try:
             result = region.body(thread_num, region)
         finally:
             self._depth[w] -= 1
+            self.recorder.emit(w, EV_GANG_EXIT, "", rid, thread_num)
         region.thread_done(thread_num, result)
 
     # ------------------------------------------------------------------
@@ -667,6 +750,7 @@ class ReplayDispatch(DispatchStrategy):
                     "recordings key regions by spawning task (one per task)")
             self.issued_gang_ids.append(region.gang_id)
             self._regions[spawn_tid] = region
+            self.recorder.emit(w, EV_GANG_RESERVE, "", spawn_tid, n_threads)
             self._fork_cv.notify_all()
 
         # wake recorded members; unplaced regions (static seed) are served by

@@ -70,7 +70,7 @@ from ..exec.registry import release_shared_core, shared_core
 from .cache import GraphCache, cache_key
 from .executor import ReplayExecutor
 from .graph_key import GraphKey, graph_key
-from .recording import Recording
+from .recording import Recording, RecordingError
 from .remap import RemapError, nearest_worker_count, remap_recording
 
 
@@ -79,14 +79,20 @@ class PoolRun:
     """One served request, structured: results, the recording that is (or
     just became) live for the shape, how the request was served (``mode``:
     ``warmup`` / ``record`` / ``adopt`` / ``remap`` / ``rerecord`` /
-    ``replay``) and a snapshot of the entry's serving counters.  The
-    session API wraps this into a :class:`~repro.api.session.RunReport`;
-    the legacy :meth:`ReplayPool.run` returns just ``results``."""
+    ``replay``) and a snapshot of the entry's serving counters.  For
+    replay serves ``stats["replay_stats"]`` carries the executor's raw
+    deviation counters (``fallback_steals`` / ``stalls`` / ``skips`` /
+    ``run_ahead``) so a slow row is explainable from the outcome alone.
+    ``trace`` is the run's :class:`~repro.obs.trace.RuntimeTrace` when the
+    pool was built with ``trace=True``.  The session API wraps this into a
+    :class:`~repro.api.session.RunReport`; the legacy
+    :meth:`ReplayPool.run` returns just ``results``."""
 
     results: Dict[int, Any]
     recording: Optional[Recording]
     mode: str
     stats: Dict[str, Any]
+    trace: Optional[Any] = None              # repro.obs.trace.RuntimeTrace
 
 
 @dataclasses.dataclass
@@ -104,6 +110,11 @@ class PoolEntryStats:
     replay_ms: float = 0.0    # EWMA of replay wall clock
     dynamic_ms: float = 0.0   # EWMA of dynamic-run wall clock (baseline)
     latency_strikes: int = 0  # consecutive replays past the latency factor
+    #: rolling (EWMA) flight-recorder metrics for this shape — populated
+    #: only when the pool traces (steal_success_rate,
+    #: dispatch_overhead_fraction, utilization, resume_latency_mean_s,
+    #: replay_fallback_rate)
+    trace_metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -162,6 +173,11 @@ class ReplayPool:
         lease released.  ``None`` (default) keeps every shape.
     stall_timeout:
         Forwarded to each :class:`ReplayExecutor`.
+    trace:
+        Run every serve (replay *and* the dynamic warmup/record paths) with
+        the flight recorder on.  Each :class:`PoolRun` then carries the
+        run's :class:`~repro.obs.trace.RuntimeTrace` and the entry keeps
+        rolling per-shape trace metrics (``PoolEntryStats.trace_metrics``).
     shared_cores:
         Lease worker cores from the process-global
         :class:`~repro.exec.registry.CoreRegistry` (default): several pools
@@ -182,6 +198,7 @@ class ReplayPool:
         warmup_runs: int = 1,
         max_shapes: Optional[int] = None,
         stall_timeout: float = 1e-3,
+        trace: bool = False,
         shared_cores: bool = True,
     ):
         if max_shapes is not None and max_shapes < 1:
@@ -195,6 +212,7 @@ class ReplayPool:
         self.warmup_runs = warmup_runs
         self.max_shapes = max_shapes
         self.stall_timeout = stall_timeout
+        self.trace = trace
         self.shared_cores = shared_cores
         self.last_recording: Optional[Recording] = None
         self.evictions = 0
@@ -348,15 +366,15 @@ class ReplayPool:
                 raise RuntimeError("ReplayPool is shut down")
             entry.stats.requests += 1
             if entry.executor is None:
-                results, mode = self._materialize(entry, key, graph,
-                                                  n_workers, rt_kwargs,
-                                                  timeout)
-                return self._outcome(entry, results, mode)
+                results, mode, trace, replayed = self._materialize(
+                    entry, key, graph, n_workers, rt_kwargs, timeout)
+                return self._outcome(entry, results, mode, trace,
+                                     replayed=replayed)
             if entry.needs_rerecord:
                 if builder is None:
-                    results = self._rerecord_inline(entry, graph, n_workers,
-                                                    rt_kwargs, timeout)
-                    return self._outcome(entry, results, "rerecord")
+                    results, trace = self._rerecord_inline(
+                        entry, graph, n_workers, rt_kwargs, timeout)
+                    return self._outcome(entry, results, "rerecord", trace)
                 if not entry.rerecord_inflight:
                     entry.rerecord_inflight = True
                     threading.Thread(
@@ -366,13 +384,22 @@ class ReplayPool:
                         name=f"replay-pool-rerecord-{ckey[:12]}",
                     ).start()
             results = self._replay(entry, graph, timeout)
-            return self._outcome(entry, results, "replay")
+            return self._outcome(entry, results, "replay", replayed=True)
 
     @staticmethod
-    def _outcome(entry: _PoolEntry, results: Dict[int, Any],
-                 mode: str) -> PoolRun:
+    def _outcome(entry: _PoolEntry, results: Dict[int, Any], mode: str,
+                 trace: Optional[Any] = None, *,
+                 replayed: bool = False) -> PoolRun:
+        stats = entry.stats.as_dict()
+        if replayed and entry.executor is not None:
+            # raw deviation counters of THIS replay — a speedup<1 row is
+            # explainable from the outcome alone (fallback steals, stalls,
+            # skips), without cross-referencing pool.describe()
+            stats["replay_stats"] = dict(entry.executor.stats)
+            if trace is None:
+                trace = entry.executor.last_trace
         return PoolRun(results=results, recording=entry.recording,
-                       mode=mode, stats=entry.stats.as_dict())
+                       mode=mode, stats=stats, trace=trace)
 
     def run(
         self,
@@ -402,6 +429,7 @@ class ReplayPool:
         elapsed = time.perf_counter() - t0
         entry.stats.replays += 1
         self._observe_drift(entry, elapsed)
+        self._note_trace(entry, entry.executor.last_trace)
         return results
 
     # ------------------------------------------------------------------
@@ -414,9 +442,11 @@ class ReplayPool:
         n_workers: int,
         rt_kwargs: Dict[str, Any],
         timeout: float,
-    ) -> Tuple[Dict[int, Any], str]:
+    ) -> Tuple[Dict[int, Any], str, Optional[Any], bool]:
         """Cold path: adopt / remap / record, install the lease, serve.
-        Returns ``(results, mode)``."""
+        Returns ``(results, mode, trace, replayed)`` — ``replayed`` says the
+        serve itself was driven by the installed executor (adopt/remap),
+        not a dynamic run."""
         policy = rt_kwargs["policy"]
         mode = "adopt"
         rec = self.cache.lookup(key, n_workers, policy)
@@ -432,27 +462,30 @@ class ReplayPool:
                 # precisely for the shipped recordings most likely to be
                 # imbalanced.  One dynamic probe seeds the EWMA.
                 entry.stats.warmups += 1
-                results, _, elapsed = self._run_dynamic(
+                results, _, elapsed, trace = self._run_dynamic(
                     graph, n_workers, rt_kwargs, timeout, record=False)
                 self._note_dynamic(entry, elapsed)
-                return results, mode
-            return self._replay(entry, graph, timeout), mode
+                self._note_trace(entry, trace)
+                return results, mode, trace, False
+            return self._replay(entry, graph, timeout), mode, None, True
         if entry.stats.warmups < self.warmup_runs:
             # serve cold requests dynamically without recording: the first
             # executions pay one-off costs (jit compiles) whose skew would
             # otherwise be baked into the recorded placement
             entry.stats.warmups += 1
-            results, _, elapsed = self._run_dynamic(
+            results, _, elapsed, trace = self._run_dynamic(
                 graph, n_workers, rt_kwargs, timeout, record=False)
             self._note_dynamic(entry, elapsed)
-            return results, "warmup"
-        results, recording, elapsed = self._run_dynamic(
+            self._note_trace(entry, trace)
+            return results, "warmup", trace, False
+        results, recording, elapsed, trace = self._run_dynamic(
             graph, n_workers, rt_kwargs, timeout, record=True)
         entry.stats.records += 1
         self._note_dynamic(entry, elapsed)
+        self._note_trace(entry, trace)
         self.cache.store(recording)
         self._install(entry, recording)
-        return results, "record"
+        return results, "record", trace, False
 
     def _remap_from_cache(
         self,
@@ -483,19 +516,19 @@ class ReplayPool:
         *,
         record: bool,
         transient: bool = False,
-    ) -> Tuple[Dict[int, Any], Optional[Recording], float]:
+    ) -> Tuple[Dict[int, Any], Optional[Recording], float, Optional[Any]]:
         """One dynamic run on the shared warm core (or on transient private
         threads when ``transient`` — the background re-record path, which
         must not occupy the serving core)."""
         from ..core.runtime import Runtime
 
         core = None if transient else self._core_for(n_workers)
-        rt = Runtime(n_workers, core=core, **rt_kwargs)
+        rt = Runtime(n_workers, core=core, trace=self.trace, **rt_kwargs)
         with rt:
             t0 = time.perf_counter()
             results = rt.run(graph, timeout=timeout, record=record)
             elapsed = time.perf_counter() - t0
-        return results, rt.last_recording, elapsed
+        return results, rt.last_recording, elapsed, rt.last_trace
 
     def _install(self, entry: _PoolEntry, recording: Recording) -> None:
         """(Re)build the entry's executor lease around ``recording``."""
@@ -506,7 +539,7 @@ class ReplayPool:
             1, sum(len(o) for o in recording.worker_orders))
         entry.executor = ReplayExecutor(
             recording, stall_timeout=self.stall_timeout, check_digest=False,
-            core=self._core_for(recording.n_workers))
+            trace=self.trace, core=self._core_for(recording.n_workers))
         entry.executor.start()
         entry.needs_rerecord = False
         entry.stats.drift_strikes = 0
@@ -522,6 +555,23 @@ class ReplayPool:
     def _note_dynamic(self, entry: _PoolEntry, elapsed_s: float) -> None:
         entry.stats.dynamic_ms = self._ewma(entry.stats.dynamic_ms,
                                             elapsed_s * 1e3)
+
+    #: flight-recorder metrics rolled per shape (ROADMAP item 4: the data
+    #: the victim-policy layer consumes)
+    _TRACE_KEYS = ("steal_success_rate", "dispatch_overhead_fraction",
+                   "utilization", "replay_fallback_rate")
+
+    def _note_trace(self, entry: _PoolEntry, trace: Optional[Any]) -> None:
+        """Roll a traced run's metrics into the entry's EWMA trackers."""
+        if trace is None:
+            return
+        metrics = trace.metrics()
+        tm = entry.stats.trace_metrics
+        for key in self._TRACE_KEYS:
+            tm[key] = self._ewma(tm.get(key, 0.0), float(metrics[key]))
+        resume_mean = float(metrics["resume_latency"]["mean_s"])
+        tm["resume_latency_mean_s"] = self._ewma(
+            tm.get("resume_latency_mean_s", 0.0), resume_mean)
 
     def _observe_drift(self, entry: _PoolEntry, elapsed_s: float) -> None:
         stats = entry.executor.stats
@@ -552,17 +602,26 @@ class ReplayPool:
         n_workers: int,
         rt_kwargs: Dict[str, Any],
         timeout: float,
-    ) -> Dict[int, Any]:
+    ) -> Tuple[Dict[int, Any], Optional[Any]]:
         """Serve this request dynamically with instrumentation on; its
         recording replaces the stale one (the request itself is the
         re-record — no double execution of side-effecting task bodies)."""
-        results, recording, elapsed = self._run_dynamic(
+        rec = entry.recording
+        if rec is not None and len(graph) != rec.n_tasks():
+            # the replay path would catch a wrong-shaped graph at the 1:1
+            # cover check; a drift-triggered re-record must not silently
+            # adopt it instead (the precomputed-key safety contract)
+            raise RecordingError(
+                f"graph has {len(graph)} tasks but the entry's recording "
+                f"covers {rec.n_tasks()}: wrong graph for this pool key")
+        results, recording, elapsed, trace = self._run_dynamic(
             graph, n_workers, rt_kwargs, timeout, record=True)
         entry.stats.rerecords += 1
         self._note_dynamic(entry, elapsed)
+        self._note_trace(entry, trace)
         self.cache.swap(recording)
         self._install(entry, recording)
-        return results
+        return results, trace
 
     def _rerecord_background(
         self,
@@ -577,7 +636,7 @@ class ReplayPool:
         then hot-swap recording + executor under the entry lock."""
         try:
             twin = builder()
-            _, recording, elapsed = self._run_dynamic(
+            _, recording, elapsed, trace = self._run_dynamic(
                 twin, n_workers, rt_kwargs, timeout, record=True,
                 transient=True)
             with entry.lock:
@@ -590,6 +649,7 @@ class ReplayPool:
                     return
                 entry.stats.rerecords += 1
                 self._note_dynamic(entry, elapsed)
+                self._note_trace(entry, trace)
                 self.cache.swap(recording)
                 self._install(entry, recording)
         except BaseException as e:  # noqa: BLE001 - surfaced via last_error

@@ -76,6 +76,12 @@ class Recording:
                     out[e] = w
         return out
 
+    def n_tasks(self) -> int:
+        """Number of distinct tasks the recording covers (plain entries;
+        frame-resume segments belong to an already-counted task)."""
+        return sum(1 for order in self.worker_orders
+                   for e in order if isinstance(e, int))
+
     def validate_against(self, graph: TaskGraph, *, check_digest: bool = True) -> None:
         """Raise :class:`RecordingError` unless this recording covers exactly
         the tasks of ``graph`` (each tid once) and — when ``check_digest`` —

@@ -59,3 +59,26 @@ def _no_orphaned_frames():
         f"orphaned-frame leak: {len(leaked)} suspended frame(s) still "
         f"parked after the suite: "
         f"{sorted(f.task.name for f in leaked)}")
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _no_leaked_trace_buffers():
+    """Assert no flight-recorder ring buffer outlives its session/executor
+    when the suite ends — traced runs must not pin event rings (and their
+    label strings) in shared registry cores or module globals."""
+    yield
+    import gc
+
+    from repro.obs.recorder import live_recorders
+
+    deadline = time.monotonic() + 10.0
+    gc.collect()
+    leaked = live_recorders()
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.05)
+        gc.collect()              # recorders are only weakly registered
+        leaked = live_recorders()
+    assert not leaked, (
+        f"trace-buffer leak: {len(leaked)} flight recorder(s) still "
+        f"reachable after the suite (workers: "
+        f"{sorted(r.n_workers for r in leaked)})")

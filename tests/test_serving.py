@@ -82,7 +82,9 @@ def test_pooled_decode_matches_dynamic_bit_identical():
     assert tok_dyn.shape == (4, 6)
     assert (tok_dyn == tok_pool).all()
     assert stats["records"] == 1 and stats["warmups"] == 1
-    assert stats["replays"] == 4
+    # a loaded box can trip the drift detector (stall fallbacks) and turn
+    # a replay into a re-record serve; both count as warm serves
+    assert stats["replays"] + stats["rerecords"] == 4
 
 
 def test_pooled_decode_remap_across_worker_counts():
