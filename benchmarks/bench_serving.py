@@ -22,6 +22,18 @@ time NOT spent in task bodies, the number behind the multi-worker serving
 collapse (see README "Observability").  The last traced step is exported
 as Perfetto JSON (``TRACE_serving.json``) and schema-validated.
 
+On top of the fixed-batch loop, ``serving_poisson`` rows drive the
+request-level continuous-batching front end (:mod:`repro.serving`) under
+seeded Poisson streaming traffic, across arrival rates and worker counts:
+per-token latency percentiles (p50/p99), time-to-first-token percentiles,
+sustained tok/s, mean batch occupancy and the pool's warm-replay hit rate
+per row.  The baseline is *per-request dynamic* serving — the same engine
+with ``max_batch=1`` on a dynamic session (FCFS, no batching) — and the
+pooled continuous-batching token streams are asserted bit-identical to it
+(each request decodes on its own KV cache, so batch composition cannot
+change its stream).  One loaded steady-state window of the pooled loop is
+traced and exported as the Perfetto artifact.
+
 Emits CSV rows (benchmarks.common schema) and ``BENCH_serving.json``.
 Env knobs: ``BENCH_SMOKE=1`` shrinks steps/workers for CI;
 ``BENCH_SERVING_JSON`` / ``BENCH_SERVING_TRACE`` override output paths.
@@ -43,6 +55,11 @@ PROMPT = 16
 STEPS = 8 if SMOKE else 24
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
 REMAP_FROM = 2
+# continuous-batching (serving_poisson) knobs: open-loop Poisson arrivals
+RATES = (60.0, 240.0) if SMOKE else (30.0, 120.0, 480.0)   # requests/s
+SERVE_REQUESTS = 8 if SMOKE else 16
+SERVE_BUDGET = (2, 6) if SMOKE else (3, 9)   # ragged budgets -> shape churn
+SERVE_BATCH = 4                              # engine decode slots
 JSON_PATH = os.environ.get("BENCH_SERVING_JSON", "BENCH_serving.json")
 TRACE_PATH = os.environ.get("BENCH_SERVING_TRACE", "TRACE_serving.json")
 
@@ -177,6 +194,73 @@ def bench_workers(setup, workers: int) -> Dict:
     }
 
 
+def _engine_fns(setup):
+    """Adapt the jitted model callables to the engine's per-request
+    signatures (params closed over; prompt shapes are constant, so both
+    compile once and every request reuses the traced executable)."""
+    _, params, _, _, prefill_fn, decode_fn = setup
+    return (lambda cache, tok: decode_fn(params, cache, tok),
+            lambda prompt: prefill_fn(params, {"tokens": prompt}))
+
+
+def _workload(setup, rate: float, seed: int = 0, n: int = SERVE_REQUESTS):
+    from repro.serving import PoissonWorkload
+
+    return PoissonWorkload(rate, n, seed=seed, prompt_len=PROMPT,
+                           max_new_tokens=SERVE_BUDGET,
+                           vocab_size=setup[0].vocab_size)
+
+
+def _drive(setup, workers: int, scheduler: str, max_batch: int,
+           workload, trace: bool = False):
+    import repro
+    from repro.serving import ContinuousBatchingEngine
+
+    decode_fn, prefill_fn = _engine_fns(setup)
+    kwargs = {"pool_kwargs": {"warmup_runs": 0}} if scheduler == "pool" else {}
+    with repro.Session(workers, scheduler=scheduler, trace=trace,
+                       **kwargs) as s:
+        eng = ContinuousBatchingEngine(s, decode_fn, prefill_fn,
+                                       max_batch=max_batch)
+        eng.prime()   # graphs + structural keys built off the hot path
+        return eng.run(workload.requests())
+
+
+def bench_poisson(setup, rate: float, workers: int) -> Dict:
+    """One arrival-rate x worker-count row: pooled continuous batching vs
+    the per-request dynamic baseline over the *same* seeded stream."""
+    pooled = _drive(setup, workers, "pool", SERVE_BATCH,
+                    _workload(setup, rate))
+    dynamic = _drive(setup, workers, "dynamic", 1, _workload(setup, rate))
+    identical = pooled.tokens_by_rid() == dynamic.tokens_by_rid()
+    assert identical, (f"continuous batching changed a token stream at "
+                       f"rate={rate} workers={workers}")
+    ps, ds = pooled.summary(), dynamic.summary()
+    return {
+        "bench": "serving_poisson", "arch": ARCH, "workers": workers,
+        "rate": rate, "requests": SERVE_REQUESTS, "max_batch": SERVE_BATCH,
+        "tokens": int(ps["tokens"]), "steps": int(ps["steps"]),
+        "p50_tok_ms": ps["p50_tok_ms"], "p99_tok_ms": ps["p99_tok_ms"],
+        "ttft_p50_ms": ps["ttft_p50_ms"], "ttft_p99_ms": ps["ttft_p99_ms"],
+        "pooled_tok_s": ps["tok_s"], "dynamic_tok_s": ds["tok_s"],
+        "speedup": round(ps["tok_s"] / ds["tok_s"], 3) if ds["tok_s"] else 0.0,
+        "warm_hit_rate": ps["warm_hit_rate"],
+        "occupancy": ps["occupancy"],
+        "identical": identical,
+    }
+
+
+def _traced_window(setup, workers: int):
+    """A short loaded burst with the flight recorder on — a separate drive
+    so tracing overhead never pollutes the measured rows.  The engine keeps
+    the most heavily loaded step's trace (the steady-state window)."""
+    report = _drive(setup, workers, "pool", SERVE_BATCH,
+                    _workload(setup, RATES[-1], seed=1,
+                              n=min(SERVE_REQUESTS, 6)),
+                    trace=True)
+    return report.trace
+
+
 def bench_remap(setup, src_workers: int, dst_workers: int,
                 reference: np.ndarray) -> Dict:
     """Record at ``src_workers``, remap, replay the whole decode loop at
@@ -220,6 +304,11 @@ def bench() -> List[Dict]:
         reference, _ = _decode_loop(setup, lambda g: session.run(g))
     for dst in (REMAP_FROM - 1, REMAP_FROM + 1):
         rows.append(bench_remap(setup, REMAP_FROM, dst, reference))
+    for rate in RATES:
+        for w in WORKERS:
+            rows.append(bench_poisson(setup, rate, w))
+    # attach the continuous-batching steady-state trace to its widest row
+    rows[-1]["_trace"] = _traced_window(setup, max(WORKERS))
     return rows
 
 
@@ -227,7 +316,10 @@ def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
     out = {
         "bench": "serving",
         "meta": {"arch": ARCH, "batch": BATCH, "prompt": PROMPT,
-                 "steps": STEPS, "workers": list(WORKERS), "smoke": SMOKE},
+                 "steps": STEPS, "workers": list(WORKERS), "smoke": SMOKE,
+                 "rates": list(RATES), "serve_requests": SERVE_REQUESTS,
+                 "serve_budget": list(SERVE_BUDGET),
+                 "serve_batch": SERVE_BATCH},
         "rows": rows,
     }
     with open(path, "w") as fh:
@@ -242,7 +334,9 @@ def write_trace_json(rows: List[Dict], path: str = TRACE_PATH) -> None:
     traced = [r for r in rows if r.get("_trace") is not None]
     if not traced:
         return
-    row = max(traced, key=lambda r: r["workers"])
+    # prefer the continuous-batching steady-state window, widest worker set
+    row = max(traced,
+              key=lambda r: (r["bench"] == "serving_poisson", r["workers"]))
     write_trace(row.pop("_trace"), path,
                 extra={"workers": row["workers"], "arch": ARCH})
     for r in traced:
@@ -260,6 +354,8 @@ def main():
     emit([r for r in rows if r["bench"] == "serving"])
     print()
     emit([r for r in rows if r["bench"] == "serving_remap"])
+    print()
+    emit([r for r in rows if r["bench"] == "serving_poisson"])
     write_json(rows)
     print(f"# wrote {JSON_PATH}")
 

@@ -1,0 +1,154 @@
+"""Bench-artifact validation: the CI checks, as an importable module.
+
+Two checks used to live as inline ``python - <<'EOF'`` blocks in
+``.github/workflows/ci.yml``; this module gives them a real home with unit
+tests (tests/test_check_artifacts.py) so the pipeline's guarantees are
+themselves guarded:
+
+* **wellformed** — every bench JSON artifact has its expected ``bench``
+  name and non-empty rows; every row honoring an ``identical`` /
+  ``no_slower`` contract actually honors it; ``BENCH_runtime.json`` must
+  carry ``suspend_frames`` rows (and per-row noise spreads, the perf
+  gate's food); ``BENCH_serving.json`` must carry ``serving_poisson``
+  continuous-batching rows with the full latency/throughput column set.
+* **noise** — the per-row repeat-spread table ((max-min)/min across bench
+  repeats) printed to stdout and appended to ``$GITHUB_STEP_SUMMARY``,
+  building the noise-floor dataset ``benchmarks/perf_gate`` thresholds
+  derive from.
+
+Usage::
+
+    python -m benchmarks.check_artifacts wellformed \
+        BENCH_runtime.json BENCH_replay.json BENCH_serving.json
+    python -m benchmarks.check_artifacts noise BENCH_runtime.json
+
+Exit code 1 (with a reason on stderr) on any malformed artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: columns every continuous-batching (serving_poisson) row must report
+POISSON_COLUMNS = (
+    "rate", "workers", "p50_tok_ms", "p99_tok_ms",
+    "ttft_p50_ms", "ttft_p99_ms", "pooled_tok_s", "dynamic_tok_s",
+    "warm_hit_rate", "occupancy", "identical",
+)
+
+
+class ArtifactError(AssertionError):
+    """A bench artifact broke one of the pipeline's contracts."""
+
+
+def expected_bench(path: str) -> str:
+    """``BENCH_runtime.json`` -> ``runtime`` (artifact naming contract)."""
+    name = os.path.basename(path)
+    if not (name.startswith("BENCH_") and name.endswith(".json")):
+        raise ArtifactError(
+            f"{path}: cannot infer bench name (want BENCH_<name>.json)")
+    return name[len("BENCH_"):-len(".json")]
+
+
+def _load(path: str) -> Dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def check_rows(path: str, out: Dict, bench: str) -> None:
+    """The per-file contracts the old inline CI block asserted."""
+    if out.get("bench") != bench or not out.get("rows"):
+        raise ArtifactError(
+            f"{path}: want bench={bench!r} with rows, got "
+            f"bench={out.get('bench')!r} rows={len(out.get('rows', []))}")
+    rows = out["rows"]
+    for row in rows:
+        # correctness contracts are booleans stamped by the bench itself:
+        # replay/pooled streams bit-identical, warm paths no slower
+        if not row.get("identical", True):
+            raise ArtifactError(f"{path}: stream diverged in row {row}")
+        if not row.get("no_slower", True):
+            raise ArtifactError(f"{path}: no_slower violated in row {row}")
+    if bench == "runtime":
+        if not any(r["bench"] == "suspend_frames" for r in rows):
+            raise ArtifactError(f"{path}: missing suspend_frames rows")
+        for row in rows:
+            if "noise" not in row:
+                raise ArtifactError(
+                    f"{path}: row missing noise spread: {row}")
+    if bench == "serving":
+        poisson = [r for r in rows if r["bench"] == "serving_poisson"]
+        if not poisson:
+            raise ArtifactError(
+                f"{path}: missing serving_poisson (continuous batching) "
+                "rows")
+        for row in poisson:
+            missing = [c for c in POISSON_COLUMNS if c not in row]
+            if missing:
+                raise ArtifactError(
+                    f"{path}: serving_poisson row missing {missing}: {row}")
+            if not 0.0 <= row["warm_hit_rate"] <= 1.0:
+                raise ArtifactError(
+                    f"{path}: warm_hit_rate out of range: {row}")
+
+
+def check_wellformed(paths: List[str]) -> str:
+    for path in paths:
+        check_rows(path, _load(path), expected_bench(path))
+    return f"benchmark artifacts OK ({len(paths)} files)"
+
+
+def noise_table(path: str) -> Tuple[str, float]:
+    """(markdown table, worst spread) over ``path``'s per-row noise."""
+    out = _load(path)
+    lines = [f"# {out.get('bench', '?')} noise (repeat relative spread)",
+             "| bench | workers | noise |", "|---|---|---|"]
+    worst = 0.0
+    for row in out["rows"]:
+        if "noise" not in row:
+            raise ArtifactError(f"{path}: row missing noise spread: {row}")
+        worst = max(worst, row["noise"])
+        lines.append(f"| {row['bench']} | {row['workers']} "
+                     f"| {row['noise']:.1%} |")
+    lines.append(f"\nworst observed spread: {worst:.1%} — the perf "
+                 "gate's thresholds sit above the accumulated floor")
+    return "\n".join(lines), worst
+
+
+def write_summary(text: str) -> None:
+    """Append to the GitHub job summary when running in Actions."""
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(text + "\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    wf = sub.add_parser("wellformed",
+                        help="validate bench JSON artifact contracts")
+    wf.add_argument("paths", nargs="+", metavar="BENCH_<name>.json")
+    nz = sub.add_parser("noise",
+                        help="print/accumulate the runner-noise table")
+    nz.add_argument("path", metavar="BENCH_runtime.json")
+    args = ap.parse_args(argv)
+    try:
+        if args.cmd == "wellformed":
+            print(check_wellformed(args.paths))
+        else:
+            text, _ = noise_table(args.path)
+            print(text)
+            write_summary(text)
+    except (ArtifactError, OSError, json.JSONDecodeError, KeyError) as err:
+        print(f"check_artifacts FAIL: {err!r}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

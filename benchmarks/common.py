@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 from repro.core import Simulator

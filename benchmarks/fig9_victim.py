@@ -7,7 +7,7 @@ from __future__ import annotations
 import time
 from typing import List
 
-from .common import CHOL_CONFIG, CHOL_MULTI, LU_QR_CONFIG, SIZES, build, emit, run
+from .common import CHOL_CONFIG, LU_QR_CONFIG, SIZES, build, emit, run
 
 
 def bench(sizes=("small", "large"), policies=("history", "random", "hybrid"),

@@ -19,9 +19,15 @@ summary.  This module closes the loop:
 
 Usage::
 
-    python -m benchmarks.perf_gate BENCH_runtime.json \
+    python -m benchmarks.perf_gate BENCH_runtime.json BENCH_serving.json \
         [--baseline benchmarks/noise_baseline.json] \
         [--accumulate] [--write-baseline PATH] [--summary]
+
+Any number of bench JSON files can be gated in one invocation; their rows
+are pooled (CI gates runtime *and* serving artifacts together).  Serving
+rows carry an arrival ``rate``, which becomes part of the row key, and
+their contracts run throughput-wise: pooled continuous batching must be no
+slower than the per-request dynamic baseline at every measured rate.
 
 Exit code 1 on a gated regression (or malformed input); 0 otherwise.
 """
@@ -53,11 +59,22 @@ CONTRACTS: Dict[str, Tuple[str, str]] = {
     # the flight recorder's off-switch is free: tracing-off serving must
     # be no slower than the same session tracing-on
     "trace_off": ("off_ms", "on_ms"),
+    # pooled replay serving must be no slower than per-request dynamic
+    # scheduling of the same decode loop...
+    "serving": ("pooled_ms", "dynamic_ms"),
+    # ...and under streaming traffic, continuous batching must sustain at
+    # least the per-request dynamic baseline's throughput at every rate
+    # (ratio is dynamic/pooled so "bigger = pooled regressed", matching
+    # the other contracts' direction)
+    "serving_poisson": ("dynamic_tok_s", "pooled_tok_s"),
 }
 
 
 def row_key(row: Dict) -> str:
-    return f"{row['bench']}/w{row['workers']}"
+    key = f"{row['bench']}/w{row['workers']}"
+    if "rate" in row:
+        key += f"/r{row['rate']:g}"
+    return key
 
 
 def load_baseline(path: str) -> Dict:
@@ -127,7 +144,9 @@ def gate(rows: List[Dict], base: Dict) -> Tuple[List[str], List[str]]:
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench_json", help="BENCH_runtime.json to gate")
+    ap.add_argument("bench_json", nargs="+",
+                    help="bench artifact(s) to gate, e.g. "
+                         "BENCH_runtime.json BENCH_serving.json")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--accumulate", action="store_true",
                     help="fold this run's spreads into the baseline file")
@@ -138,12 +157,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="append the gate table to $GITHUB_STEP_SUMMARY")
     args = ap.parse_args(argv)
 
-    with open(args.bench_json) as fh:
-        bench = json.load(fh)
-    rows = bench.get("rows", [])
-    if not rows:
-        print(f"perf-gate: no rows in {args.bench_json}", file=sys.stderr)
-        return 1
+    rows: List[Dict] = []
+    for path in args.bench_json:
+        with open(path) as fh:
+            bench = json.load(fh)
+        file_rows = bench.get("rows", [])
+        if not file_rows:
+            print(f"perf-gate: no rows in {path}", file=sys.stderr)
+            return 1
+        rows.extend(file_rows)
     base = load_baseline(args.baseline)
     failures, lines = gate(rows, base)
 

@@ -11,7 +11,15 @@ decodes N tokens per request.  Three decode schedulers:
   records, every later step replays on warm executor threads, drift
   triggers adaptive re-recording.
 
+``--arrivals poisson`` switches from the fixed batch to the request-level
+continuous-batching front end (:mod:`repro.serving`): a seeded Poisson
+stream of single-prompt requests flows through a bounded admission queue
+into per-step dynamically composed batches, with early exit on each
+request's token budget and warm pool replays per batch shape.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32 --scheduler pool
+      PYTHONPATH=src python examples/serve_lm.py --arrivals poisson \
+          --rate 100 --requests 12 --scheduler pool
 """
 
 import argparse
@@ -25,6 +33,56 @@ from repro.configs import get_config
 from repro.models import (build_decode_graph, decode_step, greedy_sample,
                           init_params, make_decode_state, prefill)
 from repro.replay import GraphCache
+
+
+def serve_poisson(args, cfg, params, prefill_fn, decode_fn):
+    """Continuous batching under streaming traffic (--arrivals poisson)."""
+    from repro.serving import ContinuousBatchingEngine, PoissonWorkload
+
+    lo, _, hi = args.max_new.partition(":")
+    budget = (int(lo), int(hi or lo))
+    if budget[1] > args.tokens:
+        raise SystemExit(f"--max-new hi {budget[1]} exceeds --tokens "
+                         f"{args.tokens} (the KV-cache budget)")
+    workload = PoissonWorkload(args.rate, args.requests, seed=args.seed,
+                               prompt_len=args.prompt_len,
+                               max_new_tokens=budget,
+                               vocab_size=cfg.vocab_size)
+    print(f"arch={cfg.name} scheduler={args.scheduler} "
+          f"workers={args.workers} max_batch={args.max_batch} "
+          f"{workload.describe()}")
+    pool = args.scheduler == "pool"
+    cache_store = (GraphCache(args.cache_dir)
+                   if args.cache_dir and pool else None)
+    kwargs = {"pool_kwargs": {"warmup_runs": 0}} if pool else {}
+    with repro.Session(args.workers, scheduler=args.scheduler,
+                       cache=cache_store, trace=bool(args.trace),
+                       **kwargs) as session:
+        engine = ContinuousBatchingEngine(
+            session,
+            lambda cache, tok: decode_fn(params, cache, tok),
+            lambda prompt: prefill_fn(params, {"tokens": prompt}),
+            max_batch=args.max_batch)
+        engine.prime()     # step graphs + keys built before traffic starts
+        report = engine.run(workload.requests())
+        if pool:
+            for ckey, stats in session.pool.describe().items():
+                print(f"pool[{ckey[:20]}…]: {stats}")
+    print(report.describe())
+    s = report.summary()
+    print(f"per-token p50/p99: {s['p50_tok_ms']:.2f}/{s['p99_tok_ms']:.2f} "
+          f"ms, ttft p50/p99: {s['ttft_p50_ms']:.2f}/{s['ttft_p99_ms']:.2f} "
+          f"ms, sustained {s['tok_s']:.0f} tok/s")
+    if args.trace and report.trace is not None:
+        from repro.obs import write_trace
+        write_trace(report.trace, args.trace,
+                    extra={"workers": args.workers, "arch": cfg.name,
+                           "scheduler": args.scheduler,
+                           "arrivals": "poisson"})
+        m = report.trace.metrics()
+        print(f"trace:   {args.trace} (most loaded step, dispatch overhead "
+              f"{m['dispatch_overhead_fraction']:.1%}, "
+              "open in https://ui.perfetto.dev)")
 
 
 def main():
@@ -46,9 +104,26 @@ def main():
                     help="serve with the flight recorder on and export the "
                          "last decode step as Perfetto JSON here "
                          "(open in https://ui.perfetto.dev)")
+    ap.add_argument("--arrivals", choices=("batch", "poisson"),
+                    default="batch",
+                    help="batch: fixed batch decoded to --tokens; poisson: "
+                         "streaming requests through the continuous-"
+                         "batching engine")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="poisson arrival rate, requests/s")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="poisson stream length")
+    ap.add_argument("--max-new", default="2:8", metavar="LO:HI",
+                    help="poisson per-request token budget span")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="continuous-batching decode slots")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="poisson workload seed (same seed, same stream)")
     args = ap.parse_args()
     if args.trace and args.scheduler == "jit":
         ap.error("--trace needs a task-graph scheduler (dynamic or pool)")
+    if args.arrivals == "poisson" and args.scheduler == "jit":
+        ap.error("--arrivals poisson needs a task-graph scheduler")
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -68,6 +143,12 @@ def main():
 
     prefill_fn = jax.jit(lambda p, b: prefill(p, cfg, b, None, max_len=max_len))
     decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, None))
+
+    if args.arrivals == "poisson":
+        if cfg.family in ("vlm", "encdec"):
+            ap.error("--arrivals poisson supports decoder-only families")
+        serve_poisson(args, cfg, params, prefill_fn, decode_fn)
+        return
 
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
           f"scheduler={args.scheduler}")

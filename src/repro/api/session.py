@@ -86,6 +86,11 @@ class Plan:
     remapped_from: Optional[int] = None
     record: bool = False
     reason: str = ""
+    #: precomputed structural GraphKey (``Session.run(key=...)``) — lets a
+    #: steady-state serving loop skip the per-request hash; safety is not
+    #: skipped (replay still enforces the 1:1 task cover, so a wrong key
+    #: fails loudly)
+    key: Optional[Any] = None                # repro.replay.GraphKey
 
     def describe(self) -> str:
         extra = ""
@@ -319,19 +324,28 @@ class Session:
             return graph
         raise TypeError(f"expected a TaskGraph/Graph, got {type(graph)!r}")
 
-    def plan(self, graph: TaskGraph, *, record: Optional[bool] = None) -> Plan:
+    def plan(self, graph: TaskGraph, *, record: Optional[bool] = None,
+             key: Optional[Any] = None) -> Plan:
         """Decide — without executing — how :meth:`run` would serve
         ``graph``; returns the decision as an inspectable :class:`Plan`.
-        Side-effect-free: nothing is recorded, stored or leased."""
+        Side-effect-free: nothing is recorded, stored or leased.  ``key``
+        supplies the graph's structural :class:`~repro.replay.GraphKey`
+        when the caller already knows it (a serving loop rebuilding one
+        shape) so planning skips the per-request hash."""
         self._require_open()
         tg = self._as_taskgraph(graph)
-        base = dict(n_workers=self.workers, policy=self.policy, graph=tg)
+        base = dict(n_workers=self.workers, policy=self.policy, graph=tg,
+                    key=key)
         if self.scheduler == "pool":
-            return Plan(mode="pool", reason=(
-                "serving pool owns the shape lifecycle "
-                "(warmup -> record -> replay, adaptive re-record)"), **base)
-        from ..replay.graph_key import graph_key
-        key = graph_key(tg)
+            return Plan(mode="pool", digest=getattr(key, "digest", None),
+                        reason=(
+                            "serving pool owns the shape lifecycle "
+                            "(warmup -> record -> replay, adaptive "
+                            "re-record)"), **base)
+        if key is None:
+            from ..replay.graph_key import graph_key
+            key = graph_key(tg)
+            base["key"] = key
         base["digest"] = key.digest
         want_record = self.record_default if record is None else record
         rec = (self.cache.lookup(key, self.workers, self.policy)
@@ -383,15 +397,18 @@ class Session:
         *,
         plan: Optional[Plan] = None,
         record: Optional[bool] = None,
+        key: Optional[Any] = None,
         timeout: float = 300.0,
     ) -> RunReport:
         """Execute ``graph`` (planned now) or a prepared ``plan`` (against
         ``graph`` when given — a sweep plans once, runs per iteration);
-        returns a :class:`RunReport`."""
+        returns a :class:`RunReport`.  ``key`` forwards a precomputed
+        :class:`~repro.replay.GraphKey` to :meth:`plan` (and, for pool
+        sessions, to the pool) so steady-state loops skip hashing."""
         if plan is None:
             if graph is None:
                 raise TypeError("run() needs a graph or a plan")
-            plan = self.plan(graph, record=record)
+            plan = self.plan(graph, record=record, key=key)
         tg = self._as_taskgraph(graph) if graph is not None else plan.graph
         with self._lock:
             self._require_open()
@@ -454,7 +471,8 @@ class Session:
         pool = self._serving_pool()
         outcome = pool.serve(
             tg, self.workers, policy=self.policy,
-            gang_default=self.gang_default, seed=self.seed, timeout=timeout)
+            gang_default=self.gang_default, seed=self.seed, timeout=timeout,
+            key=plan.key)
         stats = dict(outcome.stats)
         stats["pool_mode"] = outcome.mode
         return RunReport(results=outcome.results, plan=plan,

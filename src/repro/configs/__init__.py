@@ -5,7 +5,6 @@ inherits the shape set from the assignment (see repro.launch.shapes).
 """
 
 from importlib import import_module
-from typing import Dict
 
 from ..models.config import ModelConfig
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, List, Sequence
 
 
 @dataclasses.dataclass

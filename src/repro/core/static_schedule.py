@@ -30,10 +30,10 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List
 
 from .simulator import Simulator
-from .taskgraph import Task, TaskGraph
+from .taskgraph import TaskGraph
 from .tracing import Trace
 
 

@@ -11,10 +11,7 @@ tests) or fall back to the jnp reference path — selected by ``mode``:
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_pallas

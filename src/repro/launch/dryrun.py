@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes="
+                           "while-loop-invariant-code-motion")
 # (LICM hoists convert(saved-carry-stack) out of the backward while loop,
 # materializing an f32 copy of every layer's residual stream — 2x the remat
 # stash.  Disabling it is a deliberate, documented XLA tuning choice; see
@@ -32,8 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, get_config
 from ..models import lm
-from ..optim.adamw import AdamWConfig, adamw_init
-from ..sharding.rules import ShardCtx, make_ctx, params_pspecs
+from ..optim.adamw import AdamWConfig
+from ..sharding.rules import make_ctx
 from ..train.steps import StepConfig, make_train_step
 from .mesh import make_production_mesh
 from .shapes import SHAPE_DEFS, SHAPES, cell_applicable, decode_cache_len, input_specs

@@ -126,7 +126,6 @@ def call_multiplicities(hlo: str) -> Dict[str, float]:
         cur = frontier.pop()
         for child, factor in edges.get(cur, ()):
             add = mult[cur] * factor
-            before = mult[child]
             mult[child] += add
             frontier.append(child)
     return dict(mult)

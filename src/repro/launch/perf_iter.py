@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_disable_hlo_passes="
+                           "while-loop-invariant-code-motion")
 
 """Perf-iteration harness: compile one (arch x shape) cell under a named
 variant and report the roofline terms (the hypothesis->change->measure loop

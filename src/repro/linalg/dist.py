@@ -127,7 +127,8 @@ def build_dist_cholesky_graph(
     return g
 
 
-def _panel_task(g, name, kind, k, m_tiles, b, cm, n_threads, n_barriers, deps, rank, serial_frac=0.05):
+def _panel_task(g, name, kind, k, m_tiles, b, cm, n_threads, n_barriers,
+                deps, rank, serial_frac=0.05):
     flops_cost = cm.panel_lu(m_tiles, b) if kind == "lu" else cm.panel_qr(m_tiles, b)
     return g.add(None, name=name, kind="panel", cost=serial_frac * flops_cost,
                  priority=3, deps=deps, rank=rank, step=k,

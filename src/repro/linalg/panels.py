@@ -11,7 +11,7 @@ thread is persistently assigned tiles in a round-robin manner").
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 
@@ -122,7 +122,8 @@ def qr_panel_region(panel: np.ndarray, b: int, n_threads: int):
                             panel[j, j + 1:] -= w_red[j + 1:]
                         lo = max(sl.start, j + 1)
                         if lo < sl.stop:
-                            panel[lo:sl.stop, j + 1:] -= np.outer(panel[lo:sl.stop, j], w_red[j + 1:])
+                            panel[lo:sl.stop, j + 1:] -= np.outer(
+                                panel[lo:sl.stop, j], w_red[j + 1:])
             else:
                 region.barrier()
                 region.barrier()

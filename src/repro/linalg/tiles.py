@@ -4,7 +4,7 @@ factorization task graphs."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -133,12 +132,12 @@ class ModelConfig:
         if self.ssm_state:
             di = self.d_inner
             ssm = d * (2 * di + 2 * self.ssm_state + self.ssm_heads) + di * d + di
-        per_layer = att + (moe if self.n_experts else ffn) + (ssm if self.family in ("ssm", "hybrid") else 0)
+        per_layer = (att + (moe if self.n_experts else ffn)
+                     + (ssm if self.family in ("ssm", "hybrid") else 0))
         if self.family == "ssm":
             per_layer = ssm
         if self.family == "hybrid":
             # mamba layers + one shared attention/ffn block
-            n_attn_applications = self.n_layers // max(1, self.attn_every)
             return emb + self.n_layers * ssm + (att + ffn)  # shared block counted once
         n = self.n_layers + (self.enc_layers if self.family == "encdec" else 0)
         return emb + n * per_layer

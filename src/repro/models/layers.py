@@ -16,9 +16,7 @@ Conventions
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -48,7 +46,7 @@ def materialize(spec: Spec, key: jax.Array, dtype, scale_rule=None) -> Params:
         leaves.append((path, s))
         return None
 
-    structure = _walk(spec, ())
+    _walk(spec, ())
     keys = jax.random.split(key, max(1, len(leaves)))
     out: Dict = {}
     for (path, (shape, axes)), k in zip(leaves, keys):
@@ -257,7 +255,6 @@ def attention(p: Params, cfg, x: jnp.ndarray, *,
 
     # -- decode step ------------------------------------------------------
     idx = cache_index  # scalar int32: current cache fill
-    pos = idx[None] if idx.ndim == 0 else idx
     if use_rope:
         q = rope(q, jnp.full((B, S), idx, jnp.int32), theta)
         k = rope(k, jnp.full((B, S), idx, jnp.int32), theta)

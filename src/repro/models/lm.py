@@ -18,8 +18,7 @@ Entry points (all pure; jit/shard them from repro.launch):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ chunks a (B,H,N,P) state is carried by a scan.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

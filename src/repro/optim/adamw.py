@@ -10,7 +10,7 @@ model-parallel axis for free; the data-parallel axes hold replicated state
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,37 @@
+"""Request-level continuous-batching serving layer.
+
+``examples/serve_lm.py`` historically decoded one fixed batch in lockstep —
+every request started together, padded to the slowest finisher.  Real
+traffic is a *stream*: requests arrive at random times, want different
+numbers of tokens, and leave as soon as they are done.  This package serves
+that stream on the primitives the runtime already has:
+
+* :class:`~repro.serving.workload.PoissonWorkload` — a seeded,
+  deterministic open-loop arrival process (Poisson inter-arrivals, ragged
+  per-request token budgets);
+* :class:`~repro.serving.engine.ContinuousBatchingEngine` — a bounded
+  :class:`~repro.core.taskgraph.Channel` admission queue (backpressure for
+  free: a full queue refuses/blocks submitters), per-step dynamic batch
+  composition from the in-flight set, per-request early exit on EOS /
+  max-token budget, and per-batch-shape decode-step graphs served through a
+  :class:`~repro.api.session.Session` — with ``scheduler="pool"`` most
+  steps replay a warm recording even as the batch size churns;
+* :class:`~repro.serving.metrics.ServingReport` — per-request lifecycle
+  records rolled up into p50/p99 per-token latency, time-to-first-token,
+  sustained tok/s and the pool's warm-replay hit rate.
+"""
+
+from .engine import AdmissionFull, ContinuousBatchingEngine
+from .metrics import RequestRecord, ServingReport
+from .request import Request, RequestState
+from .workload import PoissonWorkload
+
+__all__ = [
+    "AdmissionFull",
+    "ContinuousBatchingEngine",
+    "PoissonWorkload",
+    "Request",
+    "RequestRecord",
+    "RequestState",
+    "ServingReport",
+]

@@ -21,13 +21,10 @@ unbiased across steps)."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import lm
 from ..models.config import ModelConfig

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

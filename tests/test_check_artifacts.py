@@ -1,0 +1,152 @@
+"""Tests for benchmarks.check_artifacts (the extracted CI checks)."""
+
+import json
+
+import pytest
+
+from benchmarks.check_artifacts import (
+    ArtifactError,
+    check_wellformed,
+    expected_bench,
+    main,
+    noise_table,
+)
+
+
+def _poisson_row(**over):
+    row = {
+        "bench": "serving_poisson", "workers": 2, "rate": 60.0,
+        "p50_tok_ms": 4.0, "p99_tok_ms": 9.0,
+        "ttft_p50_ms": 3.0, "ttft_p99_ms": 8.0,
+        "pooled_tok_s": 420.0, "dynamic_tok_s": 400.0,
+        "warm_hit_rate": 0.7, "occupancy": 0.5, "identical": True,
+    }
+    row.update(over)
+    return row
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / name
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+@pytest.fixture
+def artifacts(tmp_path):
+    runtime = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [
+            {"bench": "warm_reuse", "workers": 1, "noise": 0.08,
+             "no_slower": True},
+            {"bench": "suspend_frames", "workers": 2, "noise": 0.31,
+             "no_slower": True},
+        ],
+    })
+    serving = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [
+            {"bench": "serving", "workers": 1, "identical": True},
+            _poisson_row(),
+        ],
+    })
+    return runtime, serving
+
+
+def test_expected_bench_naming_contract():
+    assert expected_bench("x/y/BENCH_serving.json") == "serving"
+    with pytest.raises(ArtifactError, match="infer"):
+        expected_bench("results.json")
+
+
+def test_wellformed_accepts_good_artifacts(artifacts):
+    assert "2 files" in check_wellformed(list(artifacts))
+
+
+def test_wellformed_rejects_wrong_bench_or_empty(tmp_path):
+    p = _write(tmp_path, "BENCH_runtime.json",
+               {"bench": "replay", "rows": [{"bench": "x", "workers": 1}]})
+    with pytest.raises(ArtifactError, match="want bench='runtime'"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_serving.json", {"bench": "serving",
+                                                "rows": []})
+    with pytest.raises(ArtifactError, match="rows"):
+        check_wellformed([p])
+
+
+def test_wellformed_rejects_contract_violations(tmp_path):
+    p = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [_poisson_row(identical=False)]})
+    with pytest.raises(ArtifactError, match="diverged"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2, "noise": 0.1,
+                  "no_slower": False}]})
+    with pytest.raises(ArtifactError, match="no_slower"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_suspend_frames_and_noise(tmp_path):
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "warm_reuse", "workers": 1, "noise": 0.1}]})
+    with pytest.raises(ArtifactError, match="suspend_frames"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2}]})
+    with pytest.raises(ArtifactError, match="noise"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_poisson_rows_and_columns(tmp_path):
+    p = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [{"bench": "serving", "workers": 1, "identical": True}]})
+    with pytest.raises(ArtifactError, match="serving_poisson"):
+        check_wellformed([p])
+    row = _poisson_row()
+    del row["warm_hit_rate"]
+    p = _write(tmp_path, "BENCH_serving.json",
+               {"bench": "serving", "rows": [row]})
+    with pytest.raises(ArtifactError, match="warm_hit_rate"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_serving.json",
+               {"bench": "serving", "rows": [_poisson_row(
+                   warm_hit_rate=1.5)]})
+    with pytest.raises(ArtifactError, match="out of range"):
+        check_wellformed([p])
+
+
+def test_noise_table_and_summary(artifacts, tmp_path, monkeypatch):
+    runtime, _ = artifacts
+    text, worst = noise_table(runtime)
+    assert worst == 0.31
+    assert "| suspend_frames | 2 | 31.0% |" in text
+    assert "worst observed spread: 31.0%" in text
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert main(["noise", runtime]) == 0
+    assert "31.0%" in summary.read_text()
+
+
+def test_cli_exit_codes(artifacts, tmp_path, capsys):
+    runtime, serving = artifacts
+    assert main(["wellformed", runtime, serving]) == 0
+    bad = _write(tmp_path, "BENCH_replay.json",
+                 {"bench": "replay", "rows": [{"bench": "replay",
+                                               "workers": 1,
+                                               "identical": False}]})
+    assert main(["wellformed", bad]) == 1
+    assert "FAIL" in capsys.readouterr().err
+    assert main(["noise", str(tmp_path / "missing.json")]) == 1
+
+
+def test_real_artifacts_in_repo_root_if_present():
+    import os
+    paths = [p for p in ("BENCH_runtime.json", "BENCH_serving.json")
+             if os.path.exists(p)]
+    if not paths:
+        pytest.skip("no bench artifacts in cwd")
+    check_wellformed(paths)

@@ -9,7 +9,6 @@ from repro.core import (
     HybridPolicy,
     ListScheduler,
     ParallelSpec,
-    Simulator,
     TaskGraph,
     is_eligible_to_sched,
     make_policy,

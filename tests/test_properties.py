@@ -1,6 +1,5 @@
 """Property-based tests (hypothesis) on the scheduler's invariants."""
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

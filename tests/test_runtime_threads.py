@@ -10,7 +10,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import DeadlockError, ParallelSpec, Runtime, TaskGraph, run_graph
+from repro.core import DeadlockError, Runtime, TaskGraph, run_graph
 
 
 def test_runtime_executes_graph_and_returns_results():

@@ -1,8 +1,6 @@
 """Tests for optimizer, data pipeline, checkpointing, and the fault-tolerant
 trainer (checkpoint/restart equivalence, preemption)."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
