@@ -19,7 +19,16 @@ release the GIL):
   session serving the same graphs with ``trace=False`` vs ``trace=True``.
   Contract: tracing OFF is no slower than tracing ON (the no-op emitter
   adds no measurable per-event cost; ``no_slower`` per row, gated like
-  ``warm_reuse``).
+  ``warm_reuse``);
+* ``victim_frames`` — stats-driven frame-aware victim selection
+  (``frame_hybrid``, fed per-run trace metrics through
+  ``VictimPolicy.observe``) vs the paper hybrid on a skewed fan-in of
+  suspendable frames.  Contract: frame_hybrid is no slower;
+* ``compiled_linalg`` — a Cholesky sweep served by the ``compiled``
+  scheduler (recordings lowered to fused jitted serial programs) vs
+  ``replay`` and ``dynamic`` on the same warm substrate, with the
+  driver-measured ``dispatch_overhead_fraction`` against replay's traced
+  equivalent.  Contract: compiled is no slower than replay.
 
 Every row carries ``noise`` — the observed relative spread ``(max-min)/min``
 across its repeats — which the CI workflow surfaces per run: the first step
@@ -235,6 +244,125 @@ def bench_frames(workers: int, repeats: int = 3) -> Dict:
     }
 
 
+def skewed_frames_graph(n_pairs: int, work_s: float) -> TaskGraph:
+    """Skewed fan-in: a single root fans every producer out onto ONE
+    worker's deque, the consumers are suspendable frames waiting on the
+    channel — the shape where victim selection decides whether the fan-in
+    drains in parallel or serializes behind the root's worker."""
+    g = TaskGraph("victim-frames")
+    ch = Channel("bench.skew")
+    for i in range(n_pairs):
+        def body(ctx, i=i):
+            v = yield ctx.recv(ch)
+            return v
+        g.add(body, name=f"cons{i}")
+    root = g.add(lambda ctx: None, name="root")
+    for i in range(n_pairs):
+        def prod(ctx, i=i):
+            time.sleep(work_s)
+            ch.send(i)
+        g.add(prod, deps=[root], name=f"prod{i}")
+    return g
+
+
+def bench_victim_frames(workers: int, iters: int = 5, repeats: int = 3) -> Dict:
+    """Frame-aware (``frame_hybrid``) vs paper-hybrid victim selection on
+    the skewed fan-in graph.  One persistent *traced* session per policy:
+    every run's trace metrics are fed back through ``VictimPolicy.observe``,
+    so the stats-driven policy steers later runs from earlier feedback
+    (``frame_resumes_by_worker`` + per-victim steal hit rates).  Contract:
+    frame_hybrid is no slower than hybrid."""
+    n_pairs = 8 if SMOKE else 16
+    work_s = 0.001 if SMOKE else 0.002
+    best: Dict[str, float] = {}
+    noise = 0.0
+    for policy in ("hybrid", "frame_hybrid"):
+        times: List[float] = []
+        with repro.Session(workers, policy=policy, trace=True) as session:
+            session.run(skewed_frames_graph(n_pairs, work_s),
+                        timeout=120.0)                # warm + first feedback
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    session.run(skewed_frames_graph(n_pairs, work_s),
+                                timeout=120.0)
+                times.append((time.perf_counter() - t0) / iters)
+        best[policy] = min(times)
+        if policy == "frame_hybrid":
+            noise = _spread(times)
+    return {
+        "bench": "victim_frames", "workers": workers, "pairs": n_pairs,
+        "hybrid_ms": round(best["hybrid"] * 1e3, 3),
+        "frame_ms": round(best["frame_hybrid"] * 1e3, 3),
+        "speedup": round(best["hybrid"] / best["frame_hybrid"], 3),
+        "no_slower": bool(best["frame_hybrid"] <= best["hybrid"] * 1.25),
+        "noise": noise,
+    }
+
+
+def bench_compiled_linalg(workers: int, repeats: int = 4) -> Dict:
+    """One Cholesky shape swept dynamic vs replay vs compiled on warm
+    sessions (fresh tiles per run, identical SPD input).  The compiled
+    scheduler records on the first run and serves every later run from the
+    fused serial program; its driver reports
+    ``dispatch_overhead_fraction`` directly (time outside kernel bodies),
+    compared against the replay executor's traced equivalent.  Contract:
+    compiled is no slower than replay."""
+    import jax.numpy as jnp
+
+    from repro.linalg import build_cholesky_graph, random_spd, to_tiles
+
+    nb, b = (4, 16) if SMOKE else (6, 32)
+    a = random_spd(nb * b, seed=0, dtype=jnp.float32)
+
+    def sweep(scheduler: str):
+        times: List[float] = []
+        last = None
+        with repro.Session(workers, scheduler=scheduler) as session:
+            for _ in range(2):       # warm jit + the recording iteration
+                store = to_tiles(a, b)
+                session.run(build_cholesky_graph(nb, b, store=store),
+                            timeout=120.0)
+            for _ in range(repeats):
+                store = to_tiles(a, b)
+                g = build_cholesky_graph(nb, b, store=store)
+                t0 = time.perf_counter()
+                last = session.run(g, timeout=120.0)
+                times.append(time.perf_counter() - t0)
+        return times, last
+
+    dyn_times, _ = sweep("dynamic")
+    rep_times, _ = sweep("replay")
+    cmp_times, cmp_report = sweep("compiled")
+    # replay's overhead fraction needs the flight recorder (untimed pass);
+    # the compiled driver measures its own (1 - body_s / wall_s)
+    with repro.Session(workers, scheduler="replay", trace=True) as session:
+        rep_traced = None
+        for _ in range(3):
+            store = to_tiles(a, b)
+            rep_traced = session.run(build_cholesky_graph(nb, b, store=store),
+                                     timeout=120.0)
+    replay_overhead = (rep_traced.trace.metrics()["dispatch_overhead_fraction"]
+                       if rep_traced.trace is not None else None)
+    dyn_best, rep_best, cmp_best = min(dyn_times), min(rep_times), min(cmp_times)
+    return {
+        "bench": "compiled_linalg", "workers": workers, "nb": nb, "b": b,
+        "dynamic_ms": round(dyn_best * 1e3, 3),
+        "replay_ms": round(rep_best * 1e3, 3),
+        "compiled_ms": round(cmp_best * 1e3, 3),
+        "speedup_vs_dynamic": round(dyn_best / cmp_best, 3),
+        "speedup_vs_replay": round(rep_best / cmp_best, 3),
+        "compiled_overhead_fraction": round(
+            float(cmp_report.stats.get("dispatch_overhead_fraction", 0.0)), 4),
+        "replay_overhead_fraction": (round(float(replay_overhead), 4)
+                                     if replay_overhead is not None else None),
+        "segments": int(cmp_report.stats.get("segments", 0)),
+        "fused_tasks": int(cmp_report.stats.get("fused_tasks", 0)),
+        "no_slower": bool(cmp_best <= rep_best * 1.25),
+        "noise": _spread(cmp_times),
+    }
+
+
 def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
     out = {
         "bench": "runtime",
@@ -259,7 +387,14 @@ def main():
     print()
     frame_rows = [bench_frames(w) for w in FRAME_WORKERS]
     emit(frame_rows)
-    write_json(overlap_rows + reuse_rows + trace_rows + frame_rows)
+    print()
+    victim_rows = [bench_victim_frames(w) for w in FRAME_WORKERS]
+    emit(victim_rows)
+    print()
+    compiled_rows = [bench_compiled_linalg(w) for w in FRAME_WORKERS]
+    emit(compiled_rows)
+    write_json(overlap_rows + reuse_rows + trace_rows + frame_rows
+               + victim_rows + compiled_rows)
     print(f"# wrote {JSON_PATH}")
 
 

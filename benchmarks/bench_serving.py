@@ -9,6 +9,14 @@ way ``examples/serve_lm.py`` does, across worker counts:
 * ``pooled``  — requests go through a ``Session(scheduler="pool")`` (a
   persistent :class:`~repro.replay.ReplayPool` underneath): request 1
   records, every later request replays on warm executor threads.
+* ``compiled`` (``serving_compiled`` rows) — requests go through a
+  ``Session(scheduler="compiled")``: request 1 records, every later
+  request runs the recording *lowered to a fused serial program*
+  (:mod:`repro.compile`) on the calling thread — no worker dispatch at
+  all.  Measured across worker counts **including 4 even in smoke**: the
+  multi-worker dynamic collapse is the row's whole point, and the
+  compiled driver's ``dispatch_overhead_fraction`` is reported next to
+  the replay executor's traced equivalent.
 
 Steady-state request latency excludes each mode's first request (compile /
 record warmup).  Correctness is asserted, not eyeballed: the pooled run's
@@ -54,6 +62,10 @@ BATCH = 4
 PROMPT = 16
 STEPS = 8 if SMOKE else 24
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
+# compiled rows always include 4 workers: the acceptance claim is that the
+# fused serial program beats dynamic dispatch exactly where dynamic
+# collapses (GIL-bound multi-worker decode)
+COMPILED_WORKERS = WORKERS if 4 in WORKERS else WORKERS + (4,)
 REMAP_FROM = 2
 # continuous-batching (serving_poisson) knobs: open-loop Poisson arrivals
 RATES = (60.0, 240.0) if SMOKE else (30.0, 120.0, 480.0)   # requests/s
@@ -194,6 +206,64 @@ def bench_workers(setup, workers: int) -> Dict:
     }
 
 
+def bench_compiled(setup, workers: int) -> Dict:
+    """Compiled decode vs per-request dynamic at one worker count.  The
+    compiled session records request 1 and serves every later request from
+    the fused serial program; a timed replay pass plus a traced replay pass
+    put the compiled driver's self-measured ``dispatch_overhead_fraction``
+    next to the replay executor's traced equivalent."""
+    import repro
+
+    last_report = None
+
+    with repro.Session(workers) as dyn, \
+            repro.Session(workers, scheduler="compiled") as comp:
+        def run_comp(g):
+            nonlocal last_report
+            last_report = comp.run(g)
+
+        tok_dyn, lat_dyn, tok_comp, lat_comp = _decode_loop_pair(
+            setup, lambda g: dyn.run(g), run_comp)
+    identical = bool((tok_dyn == tok_comp).all())
+    assert identical, f"compiled decode diverged from dynamic at {workers} workers"
+    assert last_report.plan.mode == "compiled", last_report.plan
+    with repro.Session(workers, scheduler="replay") as rep:
+        tok_rep, lat_rep = _decode_loop(setup, lambda g: rep.run(g))
+    assert bool((tok_rep == tok_dyn).all()), \
+        f"replay decode diverged from dynamic at {workers} workers"
+    # replay's overhead fraction needs the flight recorder — a separate
+    # untimed pass so tracing never pollutes the measured latencies
+    with repro.Session(workers, scheduler="replay", trace=True) as rept:
+        traced: List = []
+        _decode_loop(setup, lambda g: traced.append(rept.run(g)))
+    replay_trace = next((r.trace for r in reversed(traced)
+                         if r.trace is not None), None)
+    dyn_ms, comp_ms, rep_ms = (_steady_ms(lat_dyn), _steady_ms(lat_comp),
+                               _steady_ms(lat_rep))
+    steady = lat_comp[2:]
+    return {
+        "bench": "serving_compiled", "arch": ARCH, "workers": workers,
+        "shards": BATCH, "steps": STEPS,
+        "dynamic_ms": round(dyn_ms, 3),
+        "replay_ms": round(rep_ms, 3),
+        "compiled_ms": round(comp_ms, 3),
+        "speedup_vs_dynamic": round(dyn_ms / comp_ms, 3),
+        "speedup_vs_replay": round(rep_ms / comp_ms, 3),
+        "compiled_tok_s": round(BATCH / (comp_ms * 1e-3), 1),
+        "dynamic_tok_s": round(BATCH / (dyn_ms * 1e-3), 1),
+        "compiled_overhead_fraction": round(float(
+            last_report.stats.get("dispatch_overhead_fraction", 0.0)), 4),
+        "replay_overhead_fraction": (round(float(
+            replay_trace.metrics()["dispatch_overhead_fraction"]), 4)
+            if replay_trace is not None else None),
+        "segments": int(last_report.stats.get("segments", 0)),
+        "fused_tasks": int(last_report.stats.get("fused_tasks", 0)),
+        "identical": identical,
+        "noise": round((max(steady) - min(steady)) / max(min(steady), 1e-12),
+                       4),
+    }
+
+
 def _engine_fns(setup):
     """Adapt the jitted model callables to the engine's per-request
     signatures (params closed over; prompt shapes are constant, so both
@@ -300,6 +370,7 @@ def bench() -> List[Dict]:
 
     setup = _setup()
     rows = [bench_workers(setup, w) for w in WORKERS]
+    rows += [bench_compiled(setup, w) for w in COMPILED_WORKERS]
     with repro.Session(REMAP_FROM) as session:
         reference, _ = _decode_loop(setup, lambda g: session.run(g))
     for dst in (REMAP_FROM - 1, REMAP_FROM + 1):
@@ -316,7 +387,8 @@ def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
     out = {
         "bench": "serving",
         "meta": {"arch": ARCH, "batch": BATCH, "prompt": PROMPT,
-                 "steps": STEPS, "workers": list(WORKERS), "smoke": SMOKE,
+                 "steps": STEPS, "workers": list(WORKERS),
+                 "compiled_workers": list(COMPILED_WORKERS), "smoke": SMOKE,
                  "rates": list(RATES), "serve_requests": SERVE_REQUESTS,
                  "serve_budget": list(SERVE_BUDGET),
                  "serve_batch": SERVE_BATCH},
@@ -352,6 +424,8 @@ def main():
     rows = bench()
     write_trace_json(rows)
     emit([r for r in rows if r["bench"] == "serving"])
+    print()
+    emit([r for r in rows if r["bench"] == "serving_compiled"])
     print()
     emit([r for r in rows if r["bench"] == "serving_remap"])
     print()

@@ -8,9 +8,12 @@ themselves guarded:
 * **wellformed** — every bench JSON artifact has its expected ``bench``
   name and non-empty rows; every row honoring an ``identical`` /
   ``no_slower`` contract actually honors it; ``BENCH_runtime.json`` must
-  carry ``suspend_frames`` rows (and per-row noise spreads, the perf
-  gate's food); ``BENCH_serving.json`` must carry ``serving_poisson``
-  continuous-batching rows with the full latency/throughput column set.
+  carry ``suspend_frames``, ``victim_frames`` and ``compiled_linalg`` rows
+  (and per-row noise spreads, the perf gate's food);
+  ``BENCH_serving.json`` must carry ``serving_poisson`` continuous-batching
+  rows with the full latency/throughput column set, plus
+  ``serving_compiled`` rows (including workers=4, the dispatch-collapse
+  count) with the full compiled column set.
 * **noise** — the per-row repeat-spread table ((max-min)/min across bench
   repeats) printed to stdout and appended to ``$GITHUB_STEP_SUMMARY``,
   building the noise-floor dataset ``benchmarks/perf_gate`` thresholds
@@ -38,6 +41,16 @@ POISSON_COLUMNS = (
     "rate", "workers", "p50_tok_ms", "p99_tok_ms",
     "ttft_p50_ms", "ttft_p99_ms", "pooled_tok_s", "dynamic_tok_s",
     "warm_hit_rate", "occupancy", "identical",
+)
+
+#: columns every compiled-plan serving row must report (the perf gate
+#: consumes compiled_ms/dynamic_ms; the overhead fractions are the
+#: dispatch-collapse diagnostic the row exists to publish)
+COMPILED_COLUMNS = (
+    "workers", "dynamic_ms", "replay_ms", "compiled_ms",
+    "speedup_vs_dynamic", "speedup_vs_replay",
+    "compiled_overhead_fraction", "replay_overhead_fraction",
+    "segments", "fused_tasks", "identical", "noise",
 )
 
 
@@ -76,11 +89,28 @@ def check_rows(path: str, out: Dict, bench: str) -> None:
     if bench == "runtime":
         if not any(r["bench"] == "suspend_frames" for r in rows):
             raise ArtifactError(f"{path}: missing suspend_frames rows")
+        if not any(r["bench"] == "victim_frames" for r in rows):
+            raise ArtifactError(f"{path}: missing victim_frames rows")
+        if not any(r["bench"] == "compiled_linalg" for r in rows):
+            raise ArtifactError(f"{path}: missing compiled_linalg rows")
         for row in rows:
             if "noise" not in row:
                 raise ArtifactError(
                     f"{path}: row missing noise spread: {row}")
     if bench == "serving":
+        compiled = [r for r in rows if r["bench"] == "serving_compiled"]
+        if not compiled:
+            raise ArtifactError(
+                f"{path}: missing serving_compiled (compiled plan) rows")
+        if not any(r["workers"] == 4 for r in compiled):
+            raise ArtifactError(
+                f"{path}: serving_compiled must include a workers=4 row "
+                "(the dispatch-collapse worker count)")
+        for row in compiled:
+            missing = [c for c in COMPILED_COLUMNS if c not in row]
+            if missing:
+                raise ArtifactError(
+                    f"{path}: serving_compiled row missing {missing}: {row}")
         poisson = [r for r in rows if r["bench"] == "serving_poisson"]
         if not poisson:
             raise ArtifactError(

@@ -67,6 +67,15 @@ CONTRACTS: Dict[str, Tuple[str, str]] = {
     # (ratio is dynamic/pooled so "bigger = pooled regressed", matching
     # the other contracts' direction)
     "serving_poisson": ("dynamic_tok_s", "pooled_tok_s"),
+    # compiled plans: the fused serial program must be no slower than
+    # per-request dynamic dispatch of the same decode step (it exists to
+    # beat it exactly where dynamic collapses, multi-worker decode)...
+    "serving_compiled": ("compiled_ms", "dynamic_ms"),
+    # ...and no slower than warm replay on the linalg sweep it fuses
+    "compiled_linalg": ("compiled_ms", "replay_ms"),
+    # stats-driven frame-aware victim selection must not regress the
+    # paper's hybrid policy on the skewed fan-in shape it targets
+    "victim_frames": ("frame_ms", "hybrid_ms"),
 }
 
 

@@ -41,6 +41,14 @@ Scheduler semantics
     Requests route through a session-owned
     :class:`~repro.replay.pool.ReplayPool` (warmup → record → replay with
     adaptive re-recording), the steady-state serving path.
+``compiled``
+    Replay, minus the scheduler: a cache-hit recording is lowered once
+    (:func:`repro.compile.compile_recording`) into a fused serial program
+    and every later same-shaped run executes on the single-threaded
+    :class:`~repro.compile.CompiledExecutor` — no dispatch, no GIL
+    contention, bit-identical results.  A true miss records this run and
+    compiles the next; a compiled plan that stalls (stale shape) falls
+    back to replay for that run.
 """
 
 from __future__ import annotations
@@ -55,7 +63,7 @@ from ..core.taskgraph import TaskGraph
 
 __all__ = ["Plan", "PlanError", "RunReport", "Session"]
 
-_SCHEDULERS = ("dynamic", "replay", "pool")
+_SCHEDULERS = ("dynamic", "replay", "pool", "compiled")
 
 
 class PlanError(RuntimeError):
@@ -70,8 +78,10 @@ class Plan:
     workers), ``"record"`` (dynamic with instrumentation; the recording is
     returned in the report and stored in the session cache), ``"replay"``
     (drive the attached ``recording``; ``remapped_from`` names the worker
-    count it was re-keyed from, if any) or ``"pool"`` (the serving pool
-    owns the per-shape lifecycle).  ``reason`` says why the session chose
+    count it was re-keyed from, if any), ``"compiled"`` (lower the attached
+    ``recording`` into a fused serial program and run it schedulerless —
+    :mod:`repro.compile`) or ``"pool"`` (the serving pool owns the
+    per-shape lifecycle).  ``reason`` says why the session chose
     it.  Plans are data: print them, test against them, or pass one back to
     :meth:`Session.run` — including against a *different same-shaped graph*
     (an iterative sweep plans once and executes per iteration).
@@ -185,7 +195,7 @@ class Session:
                 f"unknown scheduler {scheduler!r}; valid schedulers: "
                 f"{', '.join(_SCHEDULERS)}")
         resolve_policy(policy)       # typos fail HERE, with the valid names
-        if scheduler == "replay" and cache is None:
+        if scheduler in ("replay", "compiled") and cache is None:
             from ..replay.cache import GraphCache
             cache = GraphCache()     # recordings need a home; private one
         self.workers = workers
@@ -208,6 +218,7 @@ class Session:
         self._runtime: Optional[Any] = None              # dynamic facade
         self._executors: Dict[str, Any] = {}             # digest -> executor
         self._pool: Optional[Any] = None                 # ReplayPool
+        self._compiled: Dict[str, Any] = {}              # digest -> CompiledExecutor
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -221,6 +232,7 @@ class Session:
             self._closed = True
             executors = list(self._executors.values())
             self._executors.clear()
+            self._compiled.clear()   # threadless; nothing to shut down
             pool, self._pool = self._pool, None
             runtime, self._runtime = self._runtime, None
             core, self._core = self._core, None
@@ -351,9 +363,26 @@ class Session:
         rec = (self.cache.lookup(key, self.workers, self.policy)
                if self.cache is not None else None)
         if rec is not None:
+            if self.scheduler == "compiled":
+                return Plan(mode="compiled", recording=rec,
+                            reason="cache hit — lower the recording to a "
+                                   "fused serial program", **base)
             return Plan(mode="replay", recording=rec,
                         reason="cache hit for this shape at this worker "
                                "count", **base)
+        if self.scheduler == "compiled":
+            if self.allow_remap and self.cache is not None:
+                remapped, src = self._try_remap(key)
+                if remapped is not None:
+                    return Plan(
+                        mode="compiled", recording=remapped,
+                        remapped_from=src,
+                        reason=f"cache held the shape at {src} workers; "
+                               f"re-keyed and compiled for {self.workers}",
+                        **base)
+            return Plan(mode="record", record=True,
+                        reason="no recording for this shape — record this "
+                               "run, compile the next", **base)
         if self.scheduler == "replay":
             if self.allow_remap and self.cache is not None:
                 remapped, src = self._try_remap(key)
@@ -415,6 +444,8 @@ class Session:
             t0 = time.perf_counter()
             if plan.mode == "pool":
                 report = self._run_pool(plan, tg, timeout)
+            elif plan.mode == "compiled":
+                report = self._run_compiled(plan, tg, timeout)
             elif plan.mode == "replay":
                 report = self._run_replay(plan, tg, timeout)
             elif plan.mode in ("warm", "record"):
@@ -465,6 +496,75 @@ class Session:
                          wall_s=0.0, scheduler=self.scheduler,
                          n_workers=self.workers, stats=dict(ex.stats),
                          trace=ex.last_trace)
+
+    def _compiled_executor(self, tg: TaskGraph, recording):
+        """Get-or-build the per-digest compiled executor (threadless — no
+        core lease).  The lowering's :class:`~repro.compile.CompiledPlanMeta`
+        is persisted next to the recording in the session cache."""
+        from ..compile import CompiledExecutor, compile_recording
+        ex = self._compiled.get(recording.digest)
+        if ex is not None and ex.plan.recording is not recording:
+            ex = None                        # recording swapped (re-record)
+        if ex is None:
+            cplan = compile_recording(tg, recording)
+            ex = CompiledExecutor(tg, cplan)
+            self._compiled[recording.digest] = ex
+            if self.cache is not None and hasattr(self.cache, "store_plan_meta"):
+                self.cache.store_plan_meta(
+                    recording.digest, recording.n_workers, self.policy,
+                    cplan.meta.to_dict())
+        return ex
+
+    def _run_compiled(self, plan: Plan, tg: TaskGraph,
+                      timeout: float) -> RunReport:
+        from ..compile import CompiledRunError, CompileError
+        recording = plan.recording
+        if recording is None:
+            raise PlanError("compiled plan carries no recording")
+        if tg is not plan.graph:
+            from ..replay.graph_key import graph_key
+            if graph_key(tg).digest != recording.digest:
+                raise PlanError(
+                    f"plan's recording is for digest "
+                    f"{recording.digest[:16]} but the graph hashes "
+                    "differently")
+        if plan.remapped_from is not None and self.cache is not None:
+            self.cache.store(recording)
+        try:
+            ex = self._compiled_executor(tg, recording)
+            results = ex.run(tg, check_digest=False)
+            stats = dict(ex.stats)
+        except (CompileError, CompiledRunError) as e:
+            # stale/unlowerable plan: drop the executable and serve this
+            # run on the replay path (dynamic is replay's own fallback)
+            self._compiled.pop(recording.digest, None)
+            report = self._run_replay(plan, tg, timeout)
+            report.stats["compiled_fallback"] = str(e)
+            return report
+        return RunReport(results=results, plan=plan, recording=recording,
+                         wall_s=0.0, scheduler=self.scheduler,
+                         n_workers=self.workers, stats=stats, trace=None)
+
+    def map(self, builder, inputs, *, record: Optional[bool] = None,
+            key: Optional[Any] = None, timeout: float = 300.0):
+        """Run a sweep of same-shaped graphs through one plan: ``builder``
+        maps each input to a graph; the first graph is planned once and the
+        plan is reused for every later input (re-planned a single time when
+        the first run records, so the rest of the sweep replays/compiles).
+        Returns the per-input :class:`RunReport` list."""
+        self._require_open()
+        reports = []
+        plan: Optional[Plan] = None
+        for x in inputs:
+            g = self._as_taskgraph(builder(x))
+            if plan is None:
+                plan = self.plan(g, record=record, key=key)
+                reports.append(self.run(graph=g, plan=plan, timeout=timeout))
+                if plan.mode == "record":
+                    plan = None    # re-plan once: the next call hits the cache
+            else:
+                reports.append(self.run(graph=g, plan=plan, timeout=timeout))
+        return reports
 
     def _run_pool(self, plan: Plan, tg: TaskGraph,
                   timeout: float) -> RunReport:

@@ -1,0 +1,25 @@
+"""Compile stable recordings into fused jitted execution plans.
+
+A validated :class:`~repro.replay.Recording` is a complete execution plan;
+this package lowers one into a serial program of fused jit-compiled
+segments plus inline opaque bodies, executed by a single-threaded driver
+with Python only at segment boundaries — the record-once /
+re-execute-at-near-zero-overhead endgame (Taskgraph, PAPERS.md) that
+reverses the GIL-bound multi-worker dispatch collapse.
+"""
+
+from .driver import CompiledExecutor, CompiledRunError
+from .fuse import FuseSpec, FusedSegment, fuse_spec_of
+from .plan import CompiledPlan, CompiledPlanMeta, CompileError, compile_recording
+
+__all__ = [
+    "CompiledExecutor",
+    "CompiledRunError",
+    "CompiledPlan",
+    "CompiledPlanMeta",
+    "CompileError",
+    "FuseSpec",
+    "FusedSegment",
+    "compile_recording",
+    "fuse_spec_of",
+]

@@ -134,6 +134,63 @@ class HybridPolicy(VictimPolicy):
         return HybridPolicy(worker_id, self.n_workers, self._seed, self.window)
 
 
+class FrameAwarePolicy(HybridPolicy):
+    """Stats-driven hybrid: the paper's alternating history/random machine,
+    with the *random* probe replaced by a deterministic walk over victims
+    ranked from flight-recorder feedback.
+
+    :meth:`observe` (fed each traced run's
+    :meth:`~repro.obs.RuntimeTrace.metrics`) ranks the other workers by
+
+    * ``frame_resumes_by_worker`` — a worker that executes many frame
+      resume segments hosts suspended continuations: its queue refills as
+      channels are fed, so it is a durable steal target even when a random
+      probe of it once failed;
+    * per-victim steal hit rate (``steal_by_victim``) as the tie-break.
+
+    Until the first observation (or when the trace saw no resumes and no
+    steals) it behaves exactly like :class:`HybridPolicy`.  The walk is
+    round-robin over the ranked list, so successive probes spread over the
+    productive victims instead of hammering one — and the policy stays
+    deterministic given its seed and its observation history.
+    """
+
+    name = "frame_hybrid"
+
+    def __init__(self, worker_id: int, n_workers: int, seed: int = 0,
+                 window: int = 8):
+        super().__init__(worker_id, n_workers, seed, window)
+        self._pref: List[int] = []
+        self._pref_idx = 0
+
+    def observe(self, metrics: dict) -> None:
+        resumes = metrics.get("frame_resumes_by_worker") or {}
+        by_victim = metrics.get("steal_by_victim") or {}
+        ranked: List[tuple] = []
+        for v in range(self.n_workers):
+            if v == self.worker_id:
+                continue
+            # trace metrics carry int keys; JSON round-trips stringify them
+            res = int(resumes.get(v, resumes.get(str(v), 0)))
+            att, hits = by_victim.get(v, by_victim.get(str(v), (0, 0)))
+            rate = (hits / att) if att else 0.0
+            if res > 0 or hits > 0:
+                ranked.append((-res, -rate, v))
+        self._pref = [v for _, _, v in sorted(ranked)]
+        self._pref_idx = 0
+
+    def _rand_victim(self) -> int:
+        if self._pref:
+            v = self._pref[self._pref_idx % len(self._pref)]
+            self._pref_idx += 1
+            return v
+        return super()._rand_victim()
+
+    def clone_for(self, worker_id: int) -> "FrameAwarePolicy":
+        return FrameAwarePolicy(worker_id, self.n_workers, self._seed,
+                                self.window)
+
+
 #: The validated policy registry.  Every entry point that accepts a
 #: ``policy: str`` (``Session``, ``run_graph``, ``Runtime``, ``ReplayPool``,
 #: the simulator) resolves the name here, so a typo fails at the API
@@ -142,6 +199,7 @@ POLICIES: Dict[str, Type[VictimPolicy]] = {
     "random": RandomPolicy,
     "history": HistoryPolicy,
     "hybrid": HybridPolicy,
+    "frame_hybrid": FrameAwarePolicy,
 }
 
 

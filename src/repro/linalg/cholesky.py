@@ -25,6 +25,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from ..api.graph import Graph
+from ..compile.fuse import FuseSpec
 from ..core.taskgraph import TaskGraph
 from .tiles import CostModel, TileStore, tile_gemm_sub, tile_potrf, tile_trsm_right_lower_t
 
@@ -54,6 +55,14 @@ def build_cholesky_graph(
     g = Graph(f"cholesky[{nb}x{nb},b={b}]")
     numeric = store is not None
     noop = (lambda ctx: None) if numeric else None
+    if numeric:
+        # fuse metadata: numeric bodies are pure tile kernels over the store,
+        # declared so compiled plans can fuse runs of them into one jitted
+        # segment (Task.meta is digest-neutral — recordings are unaffected)
+        g.fuse_state = store
+
+    def _fuse(kernel, reads, writes):
+        return FuseSpec(kernel, tuple(reads), tuple(writes)) if numeric else None
 
     def potrf_body(k):
         def fn(ctx):
@@ -80,10 +89,12 @@ def build_cholesky_graph(
                         cost=SPAWN_COST * n_children, priority=3,
                         deps=[join_look] if join_look is not None else [], step=k)
         potrf = g.add(potrf_body(k), name=f"potrf[{k}]", kind="panel",
-                      cost=cm.potrf(b), priority=3, deps=[pparent], step=k)
+                      cost=cm.potrf(b), priority=3, deps=[pparent], step=k,
+                      fuse=_fuse(tile_potrf, [(k, k)], [(k, k)]))
         trsms = [
             g.add(trsm_body(i, k), name=f"trsm[{i},{k}]", kind="panel",
-                  cost=cm.trsm(b), priority=3, deps=[potrf], step=k)
+                  cost=cm.trsm(b), priority=3, deps=[potrf], step=k,
+                  fuse=_fuse(tile_trsm_right_lower_t, [(i, k), (k, k)], [(i, k)]))
             for i in range(k + 1, nb)
         ]
         pjoin = g.add(noop, name=f"panel.join[{k}]", kind="panel", cost=0.0,
@@ -106,7 +117,9 @@ def build_cholesky_graph(
                 g.add(update_body(i, k + 1, k), name=f"upd[{i},{k + 1},{k}]",
                       kind="lookahead",
                       cost=cm.syrk(b) if i == k + 1 else cm.gemm(b),
-                      priority=2, deps=[lparent], step=k)
+                      priority=2, deps=[lparent], step=k,
+                      fuse=_fuse(tile_gemm_sub,
+                                 [(i, k + 1), (i, k), (k + 1, k)], [(i, k + 1)]))
                 for i in range(k + 1, nb)
             ]
             join_look = g.add(noop, name=f"look.join[{k}]", kind="lookahead",
@@ -127,7 +140,9 @@ def build_cholesky_graph(
                         g.add(update_body(i, j, k), name=f"upd[{i},{j},{k}]",
                               kind="compute",
                               cost=cm.syrk(b) if i == j else cm.gemm(b),
-                              priority=0, deps=[tparent], step=k))
+                              priority=0, deps=[tparent], step=k,
+                              fuse=_fuse(tile_gemm_sub,
+                                         [(i, j), (i, k), (j, k)], [(i, j)])))
             join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",
                                cost=0.0, priority=0, deps=tchildren, step=k)
         else:

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.graph import Graph
+from ..compile.fuse import FuseSpec
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import lu_panel_region
@@ -31,6 +32,17 @@ from .tiles import (
     tile_gemm_nn_sub,
     tile_trsm_left_lower_unit,
 )
+
+
+def _lu_col_fused(lkk, akj, *pairs):
+    """Fused column update: ``U_kj = L_kk^{-1} A_kj`` then ``A_ij -= L_ik
+    U_kj`` for the interleaved ``(L_ik, A_ij)`` pairs.  Module-level so
+    compiled plans cache one jitted callable per column shape."""
+    ukj = tile_trsm_left_lower_unit(lkk, akj)
+    outs = [ukj]
+    for t in range(0, len(pairs), 2):
+        outs.append(tile_gemm_nn_sub(pairs[t + 1], pairs[t], ukj))
+    return outs[0] if len(outs) == 1 else tuple(outs)
 
 
 def build_lu_graph(
@@ -61,12 +73,25 @@ def build_lu_graph(
                 store[(i, k)] = jnp.asarray(panel[idx * store.b:(idx + 1) * store.b])
         return fn
 
+    if numeric:
+        g.fuse_state = store
+
     def col_body(j: int, k: int):
         def fn(ctx):
             store[(k, j)] = tile_trsm_left_lower_unit(store[(k, k)], store[(k, j)])
             for i in range(k + 1, store.nb):
                 store[(i, j)] = tile_gemm_nn_sub(store[(i, j)], store[(i, k)], store[(k, j)])
         return fn if numeric else None
+
+    def col_fuse(j: int, k: int):
+        if not numeric:
+            return None
+        reads = [(k, k), (k, j)]
+        writes = [(k, j)]
+        for i in range(k + 1, nb):
+            reads += [(i, k), (i, j)]
+            writes.append((i, j))
+        return FuseSpec(_lu_col_fused, tuple(reads), tuple(writes))
 
     def col_cost(k: int) -> float:
         return cm.trsm(b) + 2.0 * (nb - k - 1) * b ** 3 / cm.flop_rate
@@ -102,7 +127,7 @@ def build_lu_graph(
         if k + 1 < nb:
             join_look = g.add(col_body(k + 1, k), name=f"col[{k + 1},{k}]",
                               kind="lookahead", cost=col_cost(k), priority=2,
-                              deps=base_deps, step=k)
+                              deps=base_deps, step=k, fuse=col_fuse(k + 1, k))
         else:
             join_look = None
 
@@ -113,7 +138,8 @@ def build_lu_graph(
                             deps=base_deps, step=k)
             tchildren = [
                 g.add(col_body(j, k), name=f"col[{j},{k}]", kind="compute",
-                      cost=col_cost(k), priority=0, deps=[tparent], step=k)
+                      cost=col_cost(k), priority=0, deps=[tparent], step=k,
+                      fuse=col_fuse(j, k))
                 for j in range(k + 2, nb)
             ]
             join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",

@@ -17,10 +17,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.graph import Graph
+from ..compile.fuse import FuseSpec
 from ..core.taskgraph import ParallelSpec, TaskGraph
 from .cholesky import SPAWN_COST
 from .panels import qr_form_t, qr_panel_region
 from .tiles import CostModel, ShapeOnlyStore, TileStore
+
+
+class _QrFuseState:
+    """Fuse-state adapter: tile keys ``(i, j)`` resolve to the tile store,
+    ``("vt", k)`` to the panel-reflector side store."""
+
+    __slots__ = ("store",)
+
+    def __init__(self, store: TileStore):
+        self.store = store
+
+    def __getitem__(self, k):
+        if k[0] == "vt":
+            return self.store.vt_store[k[1]]
+        return self.store[k]
+
+    def __setitem__(self, k, v):
+        if k[0] == "vt":
+            self.store.vt_store[k[1]] = v
+        else:
+            self.store[k] = v
+
+
+def _qr_col_fused(vt, *tiles):
+    """Fused trailing-column update ``A_j <- (I - V T V^T)^T A_j`` over the
+    stacked tiles of block column ``j``.  Module-level so compiled plans
+    cache one jitted callable per column shape."""
+    V, T = vt
+    b = tiles[0].shape[0]
+    a = jnp.concatenate(tiles, axis=0)
+    a = a - V @ (T.T @ (V.T @ a))
+    if len(tiles) == 1:
+        return a
+    return tuple(a[i * b:(i + 1) * b] for i in range(len(tiles)))
 
 
 def build_qr_graph(
@@ -58,6 +93,9 @@ def build_qr_graph(
                 store[(i, k)] = jnp.zeros_like(store[(i, k)])
         return fn
 
+    if numeric:
+        g.fuse_state = _QrFuseState(store)
+
     def col_body(j: int, k: int):
         def fn(ctx):
             V, T = vt_store[k]
@@ -66,6 +104,12 @@ def build_qr_graph(
             for idx, i in enumerate(range(k, store.nb)):
                 store[(i, j)] = a[idx * store.b:(idx + 1) * store.b]
         return fn if numeric else None
+
+    def col_fuse(j: int, k: int):
+        if not numeric:
+            return None
+        keys = [(i, j) for i in range(k, nb)]
+        return FuseSpec(_qr_col_fused, (("vt", k),) + tuple(keys), tuple(keys))
 
     def col_cost(k: int) -> float:
         return 4.0 * (nb - k) * b ** 3 / cm.flop_rate
@@ -100,7 +144,7 @@ def build_qr_graph(
         if k + 1 < nb:
             join_look = g.add(col_body(k + 1, k), name=f"col[{k + 1},{k}]",
                               kind="lookahead", cost=col_cost(k), priority=2,
-                              deps=base_deps, step=k)
+                              deps=base_deps, step=k, fuse=col_fuse(k + 1, k))
         else:
             join_look = None
 
@@ -110,7 +154,8 @@ def build_qr_graph(
                             deps=base_deps, step=k)
             tchildren = [
                 g.add(col_body(j, k), name=f"col[{j},{k}]", kind="compute",
-                      cost=col_cost(k), priority=0, deps=[tparent], step=k)
+                      cost=col_cost(k), priority=0, deps=[tparent], step=k,
+                      fuse=col_fuse(j, k))
                 for j in range(k + 2, nb)
             ]
             join_trail = g.add(noop, name=f"trail.join[{k}]", kind="compute",

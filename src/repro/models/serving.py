@@ -30,6 +30,7 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
 from ..api.graph import Graph
+from ..compile.fuse import FuseSpec
 from ..core.taskgraph import Channel, TaskGraph
 
 # decode_fn(params, cache, tok) -> (new_cache, logits); sample_fn(logits) -> tok
@@ -51,6 +52,28 @@ class DecodeShard:
     cache: Any
     tok: Any
     logits: Any = None
+
+
+class _DecodeFuseState:
+    """Fuse-state adapter over a :class:`DecodeState`: ``("params",)``
+    resolves to the shared parameters, ``("cache", s)`` / ``("tok", s)`` /
+    ``("logits", s)`` to shard ``s``'s fields."""
+
+    __slots__ = ("state",)
+
+    def __init__(self, state: "DecodeState"):
+        self.state = state
+
+    def __getitem__(self, k):
+        if k[0] == "params":
+            return self.state.params
+        return getattr(self.state.shards[k[1]], k[0])
+
+    def __setitem__(self, k, v):
+        if k[0] == "params":
+            self.state.params = v
+        else:
+            setattr(self.state.shards[k[1]], k[0], v)
 
 
 class DecodeState:
@@ -90,6 +113,7 @@ def build_decode_graph(
     frame's suspension points) and replays every later step."""
     sample = sample_fn or greedy_sample
     g = Graph(f"decode_step[{state.n_shards}]")
+    g.fuse_state = _DecodeFuseState(state)
     tokens = Channel("decode.tokens")
     for s in range(state.n_shards):
         def _decode(s=s):
@@ -97,7 +121,15 @@ def build_decode_graph(
             sh.cache, sh.logits = decode_fn(state.params, sh.cache, sh.tok)
             return sh.logits
 
-        dec = g.add(_decode, name=f"decode{s}", kind="compute", cost=1.0)
+        # fusible: decode_fn is the pure kernel; the logits write feeds the
+        # sample task's dataflow argument.  jit_safe=False — decode_fn is
+        # caller-supplied (usually already jitted) and the compiled driver
+        # must call it exactly as the dynamic body does for bit-identity.
+        dec = g.add(_decode, name=f"decode{s}", kind="compute", cost=1.0,
+                    fuse=FuseSpec(decode_fn,
+                                  (("params",), ("cache", s), ("tok", s)),
+                                  (("cache", s), ("logits", s)),
+                                  result_key=("logits", s), jit_safe=False))
 
         def _sample(logits, s=s):
             sh = state.shards[s]

@@ -130,10 +130,14 @@ def load_trace(obj: Any) -> RuntimeTrace:
     rt.dropped = int(other.get("dropped", 0))
     metrics = other.get("metrics")
     if isinstance(metrics, dict):
-        # JSON stringifies the per-victim histogram's int keys
+        # JSON stringifies the per-worker histograms' int keys
         if isinstance(metrics.get("steal_by_victim"), dict):
             metrics["steal_by_victim"] = {
                 int(v): hits for v, hits in metrics["steal_by_victim"].items()}
+        if isinstance(metrics.get("frame_resumes_by_worker"), dict):
+            metrics["frame_resumes_by_worker"] = {
+                int(w): n
+                for w, n in metrics["frame_resumes_by_worker"].items()}
         rt._metrics_cache = metrics
     flows: Dict[int, Dict[str, Any]] = {}
     for ev in obj.get("traceEvents", []):

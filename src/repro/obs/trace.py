@@ -101,6 +101,9 @@ class RuntimeTrace(Trace):
         self.resume_latencies: List[float] = []
         #: per-victim steal histogram: victim -> [attempts, hits]
         self.steal_victims: Dict[int, List[int]] = {}
+        #: frame resume segments executed per worker — the workers that
+        #: host suspended continuations (frame-aware victim selection)
+        self.frame_resumes_by_worker: Dict[int, int] = {}
         self._metrics_cache: Optional[Dict[str, Any]] = None
 
     # -- equality is exact: events, counters and flow edges round-trip ----
@@ -159,6 +162,8 @@ class RuntimeTrace(Trace):
             "steal_success_rate": (hits / attempts) if attempts else 0.0,
             "steal_by_victim": {v: list(ah)
                                 for v, ah in sorted(self.steal_victims.items())},
+            "frame_resumes_by_worker": dict(
+                sorted(self.frame_resumes_by_worker.items())),
             "resume_latency": {
                 "count": len(lat),
                 "mean_s": (sum(lat) / len(lat)) if lat else 0.0,
@@ -299,6 +304,8 @@ def assemble(snapshot: List[Tuple[int, float, str, str, int, int]],
         elif ev == EV_FRAME_WAKE:
             wakes[(a, b)] = (w, t)
         elif ev == EV_FRAME_RESUME:
+            resumes_by_w = rt.frame_resumes_by_worker
+            resumes_by_w[w] = resumes_by_w.get(w, 0) + 1
             wake = wakes.pop((a, b), None)
             if wake is not None:
                 src_w, t_wake = wake

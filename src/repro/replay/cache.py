@@ -17,6 +17,14 @@ recording) — the hot-swap primitive the replay pool uses for adaptive
 re-recording — and :meth:`GraphCache.candidates` enumerates every worker
 count a digest has been recorded at, which is what worker-count remapping
 (:mod:`~repro.replay.remap`) feeds on.
+
+Compiled-plan metadata (:class:`~repro.compile.CompiledPlanMeta` dicts)
+rides alongside recordings under the same cache key as ``<ckey>.plan.json``
+(:meth:`store_plan_meta` / :meth:`lookup_plan_meta`): the lowering's shape
+— segment counts, fusion coverage, boundary reasons — survives the process
+while the executable itself stays memory-only.  Swapping or invalidating a
+recording drops its plan metadata too (a new recording means a stale
+lowering).
 """
 
 from __future__ import annotations
@@ -46,6 +54,7 @@ class GraphCache:
     def __init__(self, path: Optional[Union[str, os.PathLike]] = None):
         self.path = os.fspath(path) if path is not None else None
         self._mem: Dict[str, Recording] = {}
+        self._plan_meta: Dict[str, dict] = {}
         self._lock = threading.Lock()
         if self.path is not None:
             os.makedirs(self.path, exist_ok=True)
@@ -113,6 +122,59 @@ class GraphCache:
         self._write(ckey, recording)
         return ckey
 
+    # ------------------------------------------------------------------
+    # compiled-plan metadata (rides the recording's cache key)
+    def _plan_file_for(self, ckey: str) -> Optional[str]:
+        if self.path is None:
+            return None
+        return os.path.join(self.path, f"{ckey}.plan.json")
+
+    def store_plan_meta(self, key: Union[GraphKey, str], n_workers: int,
+                        policy: str, meta: dict) -> str:
+        """Persist a compiled plan's descriptive metadata next to the
+        recording it was lowered from.  Returns the cache key."""
+        ckey = cache_key(key, n_workers, policy)
+        with self._lock:
+            self._plan_meta[ckey] = dict(meta)
+        f = self._plan_file_for(ckey)
+        if f is not None:
+            tmp = f + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(meta, fh)
+            os.replace(tmp, f)
+        return ckey
+
+    def lookup_plan_meta(self, key: Union[GraphKey, str], n_workers: int,
+                         policy: str = "hybrid") -> Optional[dict]:
+        """The stored compiled-plan metadata for this shape/config, or
+        None (corrupt files miss, like recordings)."""
+        ckey = cache_key(key, n_workers, policy)
+        with self._lock:
+            meta = self._plan_meta.get(ckey)
+        if meta is not None:
+            return dict(meta)
+        f = self._plan_file_for(ckey)
+        if f is not None and os.path.exists(f):
+            try:
+                with open(f) as fh:
+                    meta = json.load(fh)
+            except (OSError, ValueError):
+                return None
+            with self._lock:
+                self._plan_meta[ckey] = dict(meta)
+            return meta
+        return None
+
+    def _drop_plan_meta(self, ckey: str) -> None:
+        with self._lock:
+            self._plan_meta.pop(ckey, None)
+        f = self._plan_file_for(ckey)
+        if f is not None and os.path.exists(f):
+            try:
+                os.remove(f)
+            except OSError:
+                pass
+
     def swap(self, recording: Recording) -> Optional[Recording]:
         """Hot-swap ``recording`` over whatever the cache held for its key
         and return the replaced recording (None when the slot was empty).
@@ -126,6 +188,7 @@ class GraphCache:
             old = self._mem.get(ckey)
             self._mem[ckey] = recording
         self._write(ckey, recording)
+        self._drop_plan_meta(ckey)   # a new recording stales any lowering
         return old
 
     def invalidate(
@@ -146,6 +209,7 @@ class GraphCache:
                 dropped = True
             except OSError:
                 pass
+        self._drop_plan_meta(ckey)
         return dropped
 
     def candidates(
@@ -187,3 +251,4 @@ class GraphCache:
     def clear(self) -> None:
         with self._lock:
             self._mem.clear()
+            self._plan_meta.clear()

@@ -44,6 +44,18 @@ same warm substrate:
   (warmups, recordings, re-recordings); a replay EWMA above ``factor ×``
   the dynamic baseline for ``drift_patience`` consecutive runs also
   triggers re-recording — even at zero fallback steals;
+* **warm → compiled promotion** — with ``compile_after`` set, an entry
+  whose last ``compile_after`` replays were *deviation-free* (zero fallback
+  steals / skips, no pending re-record) is promoted: the recording is
+  lowered via :func:`~repro.compile.compile_recording` into a fused serial
+  plan and later requests are served by a
+  :class:`~repro.compile.CompiledExecutor` (mode ``compiled``) — no worker
+  dispatch at all.  The lowering's shape is persisted next to the recording
+  (:meth:`GraphCache.store_plan_meta`).  A compiled serve that fails
+  (:class:`~repro.compile.CompiledRunError` — the plan no longer matches
+  the graph's behavior) demotes the entry back to replay, where the drift
+  machinery takes over; a re-record (:meth:`_install`) always drops the
+  compiled plan, and clean replays must be re-earned;
 * **multi-tenant cap** — ``max_shapes`` bounds the number of resident
   entries; inserting past the cap evicts the least-recently-used
   ``(GraphKey, workers, policy)`` entry, releasing its core lease (cheap:
@@ -79,7 +91,10 @@ class PoolRun:
     """One served request, structured: results, the recording that is (or
     just became) live for the shape, how the request was served (``mode``:
     ``warmup`` / ``record`` / ``adopt`` / ``remap`` / ``rerecord`` /
-    ``replay``) and a snapshot of the entry's serving counters.  For
+    ``replay`` / ``compiled``) and a snapshot of the entry's serving
+    counters.  For compiled serves ``stats["compiled_stats"]`` carries the
+    driver's counters (``dispatch_overhead_fraction``, segments, fused
+    tasks).  For
     replay serves ``stats["replay_stats"]`` carries the executor's raw
     deviation counters (``fallback_steals`` / ``stalls`` / ``skips`` /
     ``run_ahead``) so a slow row is explainable from the outcome alone.
@@ -110,6 +125,11 @@ class PoolEntryStats:
     replay_ms: float = 0.0    # EWMA of replay wall clock
     dynamic_ms: float = 0.0   # EWMA of dynamic-run wall clock (baseline)
     latency_strikes: int = 0  # consecutive replays past the latency factor
+    clean_replays: int = 0    # consecutive deviation-free replays
+    compiles: int = 0         # warm -> compiled promotions
+    compiled_serves: int = 0  # serves run on the compiled executor
+    compile_failures: int = 0  # lowering/compiled-run failures (fell back)
+    compiled_ms: float = 0.0  # EWMA of compiled-serve wall clock
     #: rolling (EWMA) flight-recorder metrics for this shape — populated
     #: only when the pool traces (steal_success_rate,
     #: dispatch_overhead_fraction, utilization, resume_latency_mean_s,
@@ -117,18 +137,40 @@ class PoolEntryStats:
     trace_metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        # hand-rolled: this runs on EVERY serve (the outcome snapshot), and
+        # dataclasses.asdict deep-copies recursively — including
+        # trace_metrics — which showed up on the smoke-bench serve path
+        return {
+            "requests": self.requests,
+            "replays": self.replays,
+            "warmups": self.warmups,
+            "records": self.records,
+            "remaps": self.remaps,
+            "rerecords": self.rerecords,
+            "drift": self.drift,
+            "drift_strikes": self.drift_strikes,
+            "replay_ms": self.replay_ms,
+            "dynamic_ms": self.dynamic_ms,
+            "latency_strikes": self.latency_strikes,
+            "clean_replays": self.clean_replays,
+            "compiles": self.compiles,
+            "compiled_serves": self.compiled_serves,
+            "compile_failures": self.compile_failures,
+            "compiled_ms": self.compiled_ms,
+            "trace_metrics": dict(self.trace_metrics),
+        }
 
 
 class _PoolEntry:
     """One per-shape lease (executor + recording) + drift bookkeeping."""
 
-    __slots__ = ("executor", "recording", "n_entries", "lock", "stats",
-                 "needs_rerecord", "rerecord_inflight", "last_error")
+    __slots__ = ("executor", "recording", "compiled", "n_entries", "lock",
+                 "stats", "needs_rerecord", "rerecord_inflight", "last_error")
 
     def __init__(self) -> None:
         self.executor: Optional[ReplayExecutor] = None
         self.recording: Optional[Recording] = None
+        self.compiled: Optional[Any] = None   # repro.compile.CompiledExecutor
         self.n_entries = 1
         self.lock = threading.Lock()
         self.stats = PoolEntryStats()
@@ -171,6 +213,10 @@ class ReplayPool:
         Cap on resident ``(GraphKey, workers, policy)`` entries; the
         least-recently-used entry past the cap is evicted and its core
         lease released.  ``None`` (default) keeps every shape.
+    compile_after:
+        Promote an entry to a fused compiled plan after this many
+        *consecutive deviation-free* replays (see module docstring).
+        ``None`` (default) disables promotion.
     stall_timeout:
         Forwarded to each :class:`ReplayExecutor`.
     trace:
@@ -196,6 +242,7 @@ class ReplayPool:
         latency_alpha: float = 0.3,
         allow_remap: bool = True,
         warmup_runs: int = 1,
+        compile_after: Optional[int] = None,
         max_shapes: Optional[int] = None,
         stall_timeout: float = 1e-3,
         trace: bool = False,
@@ -203,6 +250,9 @@ class ReplayPool:
     ):
         if max_shapes is not None and max_shapes < 1:
             raise ValueError("max_shapes must be >= 1 (or None for no cap)")
+        if compile_after is not None and compile_after < 1:
+            raise ValueError(
+                "compile_after must be >= 1 (or None to disable promotion)")
         self.cache = cache if cache is not None else GraphCache()
         self.drift_threshold = drift_threshold
         self.drift_patience = drift_patience
@@ -210,6 +260,7 @@ class ReplayPool:
         self.latency_alpha = latency_alpha
         self.allow_remap = allow_remap
         self.warmup_runs = warmup_runs
+        self.compile_after = compile_after
         self.max_shapes = max_shapes
         self.stall_timeout = stall_timeout
         self.trace = trace
@@ -251,6 +302,7 @@ class ReplayPool:
             if entry.executor is not None:
                 entry.executor.shutdown()
                 entry.executor = None
+            entry.compiled = None   # threadless — just drop the reference
             entry.needs_rerecord = False
 
     def __enter__(self) -> "ReplayPool":
@@ -383,6 +435,20 @@ class ReplayPool:
                         daemon=True,
                         name=f"replay-pool-rerecord-{ckey[:12]}",
                     ).start()
+            if entry.compiled is not None and not entry.needs_rerecord:
+                from ..compile import CompiledRunError
+
+                try:
+                    results = self._serve_compiled(entry, graph, timeout)
+                    return self._outcome(entry, results, "compiled")
+                except CompiledRunError as e:
+                    # the plan no longer matches the graph's behavior —
+                    # demote to replay and let the drift machinery decide
+                    # whether the recording itself has gone stale
+                    entry.compiled = None
+                    entry.stats.compile_failures += 1
+                    entry.stats.clean_replays = 0
+                    entry.last_error = e
             results = self._replay(entry, graph, timeout)
             return self._outcome(entry, results, "replay", replayed=True)
 
@@ -391,6 +457,8 @@ class ReplayPool:
                  trace: Optional[Any] = None, *,
                  replayed: bool = False) -> PoolRun:
         stats = entry.stats.as_dict()
+        if mode == "compiled" and entry.compiled is not None:
+            stats["compiled_stats"] = dict(entry.compiled.stats)
         if replayed and entry.executor is not None:
             # raw deviation counters of THIS replay — a speedup<1 row is
             # explainable from the outcome alone (fallback steals, stalls,
@@ -430,7 +498,44 @@ class ReplayPool:
         entry.stats.replays += 1
         self._observe_drift(entry, elapsed)
         self._note_trace(entry, entry.executor.last_trace)
+        if (self.compile_after is not None and entry.compiled is None
+                and not entry.needs_rerecord
+                and entry.stats.clean_replays >= self.compile_after):
+            self._promote(entry, graph)
         return results
+
+    def _serve_compiled(self, entry: _PoolEntry, graph: TaskGraph,
+                        timeout: float) -> Dict[int, Any]:
+        """One serve on the entry's compiled plan: single-threaded fused
+        dispatch — no worker hand-off, no queues.  ``timeout`` is unused
+        (the driver is synchronous); kept for signature symmetry."""
+        t0 = time.perf_counter()
+        results = entry.compiled.run(graph, check_digest=False)
+        elapsed = time.perf_counter() - t0
+        st = entry.stats
+        st.compiled_serves += 1
+        st.compiled_ms = self._ewma(st.compiled_ms, elapsed * 1e3)
+        return results
+
+    def _promote(self, entry: _PoolEntry, graph: TaskGraph) -> None:
+        """Lower the entry's (stable) recording into a fused compiled plan
+        and persist the lowering's shape next to the recording.  A failed
+        lowering resets the clean-replay streak — the entry keeps replaying
+        and must re-earn promotion before the pool tries again."""
+        from ..compile import CompiledExecutor, CompileError, compile_recording
+
+        rec = entry.recording
+        try:
+            plan = compile_recording(graph, rec)
+            entry.compiled = CompiledExecutor(graph, plan)
+        except CompileError as e:
+            entry.stats.compile_failures += 1
+            entry.stats.clean_replays = 0
+            entry.last_error = e
+            return
+        entry.stats.compiles += 1
+        self.cache.store_plan_meta(rec.digest, rec.n_workers, rec.policy,
+                                   plan.meta.to_dict())
 
     # ------------------------------------------------------------------
     # entry construction paths
@@ -544,6 +649,10 @@ class ReplayPool:
         entry.needs_rerecord = False
         entry.stats.drift_strikes = 0
         entry.stats.latency_strikes = 0
+        # a new recording stales any lowering (the cache drops the plan
+        # meta on swap for the same reason); promotion must be re-earned
+        entry.compiled = None
+        entry.stats.clean_replays = 0
 
     # ------------------------------------------------------------------
     # adaptive re-recording (plan deviation + latency regression)
@@ -594,6 +703,13 @@ class ReplayPool:
         if (st.drift_strikes >= self.drift_patience
                 or st.latency_strikes >= self.drift_patience):
             entry.needs_rerecord = True
+        # a replay that earned no strike of either kind is "clean" — the
+        # streak that earns warm -> compiled promotion (compile_after)
+        if (st.drift_strikes == 0 and st.latency_strikes == 0
+                and not entry.needs_rerecord):
+            st.clean_replays += 1
+        else:
+            st.clean_replays = 0
 
     def _rerecord_inline(
         self,

@@ -55,12 +55,32 @@ PrefillFn = Callable[[Any], Tuple[Any, Any]]       # prompt -> (cache, logits)
 SampleFn = Callable[[Any], Any]                    # logits -> token
 
 #: pool serve modes driven by a warm recording (the hit side of the
-#: warm-replay hit rate; warmup/record/rerecord are dynamic serves)
-_WARM_MODES = ("replay", "adopt", "remap")
+#: warm-replay hit rate; warmup/record/rerecord are dynamic serves).
+#: ``compiled`` counts as warm: it is the promoted form of a warm replay.
+_WARM_MODES = ("replay", "adopt", "remap", "compiled")
 
 
 class AdmissionFull(RuntimeError):
     """The bounded admission queue refused a request (backpressure)."""
+
+
+class _LaneFuseState:
+    """Fuse-state adapter over the engine's live lane list: ``("cache", i)``
+    / ``("tok", i)`` / ``("logits", i)`` resolve to lane ``i``'s in-flight
+    :class:`~repro.serving.request.RequestState` *at call time* — lanes
+    shift between steps, so the adapter must read through ``_active``, not
+    bind states at graph-build time."""
+
+    __slots__ = ("engine",)
+
+    def __init__(self, engine: "ContinuousBatchingEngine"):
+        self.engine = engine
+
+    def __getitem__(self, k):
+        return getattr(self.engine._active[k[1]], k[0])
+
+    def __setitem__(self, k, v):
+        setattr(self.engine._active[k[1]], k[0], v)
 
 
 class ContinuousBatchingEngine:
@@ -191,7 +211,10 @@ class ContinuousBatchingEngine:
         cached = self._graphs.get(k)
         if cached is not None:
             return cached
+        from ..compile.fuse import FuseSpec
+
         g = Graph(f"serve_step[{k}]")
+        g.fuse_state = _LaneFuseState(self)
         tokens = Channel(f"serve.tokens[{k}]")
         for i in range(k):
             def _decode(i=i):
@@ -199,7 +222,15 @@ class ContinuousBatchingEngine:
                 st.cache, st.logits = self._decode_fn(st.cache, st.tok)
                 return st.logits
 
-            dec = g.add(_decode, name=f"decode{i}", kind="compute", cost=1.0)
+            # fusible for the pool's warm -> compiled promotion: decode_fn
+            # is the pure kernel (usually pre-jitted); jit_safe=False so the
+            # compiled driver calls it exactly like the dynamic body does
+            dec = g.add(_decode, name=f"decode{i}", kind="compute", cost=1.0,
+                        fuse=FuseSpec(self._decode_fn,
+                                      (("cache", i), ("tok", i)),
+                                      (("cache", i), ("logits", i)),
+                                      result_key=("logits", i),
+                                      jit_safe=False))
 
             def _sample(logits, i=i):
                 st = self._active[i]

@@ -25,6 +25,27 @@ def _poisson_row(**over):
     return row
 
 
+def _compiled_row(**over):
+    row = {
+        "bench": "serving_compiled", "workers": 4,
+        "dynamic_ms": 8.0, "replay_ms": 7.0, "compiled_ms": 5.0,
+        "speedup_vs_dynamic": 1.6, "speedup_vs_replay": 1.4,
+        "compiled_overhead_fraction": 0.02, "replay_overhead_fraction": 0.5,
+        "segments": 13, "fused_tasks": 4, "identical": True, "noise": 0.1,
+    }
+    row.update(over)
+    return row
+
+
+def _runtime_extra_rows():
+    return [
+        {"bench": "victim_frames", "workers": 2, "noise": 0.05,
+         "no_slower": True},
+        {"bench": "compiled_linalg", "workers": 2, "noise": 0.2,
+         "no_slower": True},
+    ]
+
+
 def _write(tmp_path, name, payload):
     path = tmp_path / name
     path.write_text(json.dumps(payload))
@@ -40,12 +61,13 @@ def artifacts(tmp_path):
              "no_slower": True},
             {"bench": "suspend_frames", "workers": 2, "noise": 0.31,
              "no_slower": True},
-        ],
+        ] + _runtime_extra_rows(),
     })
     serving = _write(tmp_path, "BENCH_serving.json", {
         "bench": "serving",
         "rows": [
             {"bench": "serving", "workers": 1, "identical": True},
+            _compiled_row(),
             _poisson_row(),
         ],
     })
@@ -95,25 +117,61 @@ def test_wellformed_requires_suspend_frames_and_noise(tmp_path):
         check_wellformed([p])
     p = _write(tmp_path, "BENCH_runtime.json", {
         "bench": "runtime",
-        "rows": [{"bench": "suspend_frames", "workers": 2}]})
+        "rows": [{"bench": "suspend_frames", "workers": 2}]
+        + _runtime_extra_rows()})
     with pytest.raises(ArtifactError, match="noise"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_victim_and_compiled_rows(tmp_path):
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2, "noise": 0.1},
+                 {"bench": "compiled_linalg", "workers": 2, "noise": 0.1}]})
+    with pytest.raises(ArtifactError, match="victim_frames"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2, "noise": 0.1},
+                 {"bench": "victim_frames", "workers": 2, "noise": 0.1}]})
+    with pytest.raises(ArtifactError, match="compiled_linalg"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_compiled_rows_and_columns(tmp_path):
+    p = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [_poisson_row()]})
+    with pytest.raises(ArtifactError, match="serving_compiled"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [_compiled_row(workers=2), _poisson_row()]})
+    with pytest.raises(ArtifactError, match="workers=4"):
+        check_wellformed([p])
+    row = _compiled_row()
+    del row["compiled_overhead_fraction"]
+    p = _write(tmp_path, "BENCH_serving.json",
+               {"bench": "serving", "rows": [row, _poisson_row()]})
+    with pytest.raises(ArtifactError, match="compiled_overhead_fraction"):
         check_wellformed([p])
 
 
 def test_wellformed_requires_poisson_rows_and_columns(tmp_path):
     p = _write(tmp_path, "BENCH_serving.json", {
         "bench": "serving",
-        "rows": [{"bench": "serving", "workers": 1, "identical": True}]})
+        "rows": [{"bench": "serving", "workers": 1, "identical": True},
+                 _compiled_row()]})
     with pytest.raises(ArtifactError, match="serving_poisson"):
         check_wellformed([p])
     row = _poisson_row()
     del row["warm_hit_rate"]
     p = _write(tmp_path, "BENCH_serving.json",
-               {"bench": "serving", "rows": [row]})
+               {"bench": "serving", "rows": [_compiled_row(), row]})
     with pytest.raises(ArtifactError, match="warm_hit_rate"):
         check_wellformed([p])
     p = _write(tmp_path, "BENCH_serving.json",
-               {"bench": "serving", "rows": [_poisson_row(
+               {"bench": "serving", "rows": [_compiled_row(), _poisson_row(
                    warm_hit_rate=1.5)]})
     with pytest.raises(ArtifactError, match="out of range"):
         check_wellformed([p])

@@ -1,0 +1,331 @@
+"""Tests for repro.compile: lowering stable recordings into fused serial
+plans (PR-8 tentpole).
+
+Covers the contract stack bottom-up: the segmentation invariants of
+``compile_recording`` (every task covered exactly once, boundaries recorded
+with reasons, stale recordings rejected loudly); bit-identity of the
+compiled path against dynamic and replay scheduling for the linalg
+factorizations and the pooled decode loop; the warm -> compiled promotion
+ladder in :class:`~repro.replay.ReplayPool` including demotion on a failed
+compiled serve; and :class:`~repro.replay.GraphCache` round-tripping the
+lowering's :class:`~repro.compile.CompiledPlanMeta` next to the recording
+(and dropping it when the recording is swapped).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro.compile import (
+    CompiledExecutor,
+    CompiledPlanMeta,
+    CompiledRunError,
+    CompileError,
+    compile_recording,
+)
+from repro.core import Runtime
+from repro.linalg import (
+    build_cholesky_graph,
+    build_lu_graph,
+    build_qr_graph,
+    cholesky_extract,
+    lu_extract,
+    qr_extract_r,
+    random_diagdom,
+    random_spd,
+    to_tiles,
+)
+from repro.replay import GraphCache, Recording, ReplayPool
+
+NB, B = 4, 8
+
+
+def _record_cholesky(workers=2, seed=3):
+    a = random_spd(NB * B, seed=seed)
+    st = to_tiles(a, B)
+    g = build_cholesky_graph(NB, B, store=st)
+    with Runtime(workers) as rt:
+        rt.run(g, record=True)
+    return a, np.asarray(cholesky_extract(st)), g, rt.last_recording
+
+
+# ---------------------------------------------------------------------------
+# compile_recording: segmentation invariants
+# ---------------------------------------------------------------------------
+def test_plan_covers_every_task_exactly_once():
+    _, _, g, rec = _record_cholesky()
+    plan = compile_recording(g, rec)
+    seen = []
+    for entry in plan.program:
+        if entry[0] == "fused":
+            seen.extend(entry[1].tids)
+        elif entry[0] == "task":
+            seen.append(entry[1])
+        # ("resume", tid, seg) re-enters an already-seen task's frame
+    assert sorted(seen) == sorted(t.tid for t in g.tasks)
+    assert len(seen) == len(set(seen))
+    m = plan.meta
+    assert m.n_tasks == len(g.tasks)
+    assert m.n_fused_tasks + m.n_opaque == m.n_tasks
+    assert m.n_segments == len(plan.program)
+    assert m.digest == rec.digest
+
+
+def test_segment_boundaries_record_their_reasons():
+    """The boundary census — why each segment was cut — is the lowering's
+    observable shape and lands in the cached plan meta.  Dynamic schedules
+    vary run to run, so only schedule-independent facts are asserted; a
+    hand-built two-worker interleaving pins the worker_switch reason."""
+    _, _, g, rec = _record_cholesky(workers=2)
+    plan = compile_recording(g, rec)
+    assert plan.meta.n_fused >= 1
+    assert plan.meta.jit_segments >= 1
+    # each cut emits at most one fused entry, so the census bounds n_fused
+    assert sum(plan.meta.boundaries.values()) >= plan.meta.n_fused
+    known = {"worker_switch", "opaque", "gang", "resume", "end"}
+    assert set(plan.meta.boundaries) <= known
+    # single-worker lowering of the same shape needs no worker cuts
+    _, _, g1, rec1 = _record_cholesky(workers=1)
+    plan1 = compile_recording(g1, rec1)
+    assert "worker_switch" not in plan1.meta.boundaries
+    assert plan1.meta.n_segments <= plan.meta.n_segments
+    # force an interleaving: fold the serial order onto two alternating
+    # workers — every consecutive fusible pair now straddles a switch
+    r2 = Recording.from_dict(rec1.to_dict())
+    serial = list(rec1.worker_orders[0])
+    r2.worker_orders = [serial[0::2], serial[1::2]]
+    r2.n_workers = 2
+    plan2 = compile_recording(g1, r2)
+    assert plan2.meta.boundaries.get("worker_switch", 0) >= 1
+    assert plan2.meta.n_segments >= plan1.meta.n_segments
+
+
+def test_stale_recording_rejected_with_compile_error():
+    _, _, g, rec = _record_cholesky(workers=2)
+    bad = Recording.from_dict(rec.to_dict())
+    bad.worker_orders = [list(reversed(o)) for o in bad.worker_orders]
+    with pytest.raises(CompileError, match="stale"):
+        compile_recording(g, bad)
+
+
+def test_plan_meta_round_trips_and_ignores_unknown_keys():
+    _, _, g, rec = _record_cholesky()
+    meta = compile_recording(g, rec).meta
+    d = meta.to_dict()
+    assert json.loads(json.dumps(d)) == d       # JSON-serializable
+    assert CompiledPlanMeta.from_dict(d) == meta
+    d["future_field"] = "ignored"
+    assert CompiledPlanMeta.from_dict(d) == meta
+
+
+def test_executor_rejects_digest_mismatch_and_reports_stats():
+    a, l_ref, g, rec = _record_cholesky()
+    ex = CompiledExecutor(g, compile_recording(g, rec))
+    st2 = to_tiles(a, B)
+    g2 = build_cholesky_graph(NB, B, store=st2)
+    ex.run(g2)                                  # same digest: fine
+    assert (np.asarray(cholesky_extract(st2)) == l_ref).all()
+    stats = ex.stats
+    assert 0.0 <= stats["dispatch_overhead_fraction"] < 1.0
+    assert stats["segments"] == ex.plan.meta.n_segments
+    other = build_cholesky_graph(NB + 1, B)
+    with pytest.raises(CompiledRunError, match="digest"):
+        ex.run(other)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity goldens: compiled vs dynamic vs replay
+# ---------------------------------------------------------------------------
+def _factor_with(scheduler, cache, builder, extract, store, runs=3):
+    """Run ``runs`` same-shaped sweeps through one session; return the last
+    run's extracted factor(s) and report."""
+    report = None
+    with repro.Session(2, scheduler=scheduler, cache=cache) as s:
+        for st in store[:-1]:
+            s.run(builder(st))
+        report = s.run(builder(store[-1]))
+    return tuple(np.asarray(x) for x in extract(store[-1])), report
+
+
+@pytest.mark.parametrize("name", ["cholesky", "lu", "qr"])
+def test_compiled_factorizations_bit_identical(name):
+    if name == "cholesky":
+        mat = random_spd(NB * B, seed=7)
+        builder = lambda st: build_cholesky_graph(NB, B, store=st)  # noqa: E731
+        extract = lambda st: (cholesky_extract(st),)                # noqa: E731
+    elif name == "lu":
+        mat = random_diagdom(NB * B, seed=7)
+        builder = lambda st: build_lu_graph(NB, B, store=st, panel_threads=2)  # noqa: E731
+        extract = lu_extract
+    else:
+        mat = random_spd(NB * B, seed=7)
+        builder = lambda st: build_qr_graph(NB, B, store=st, panel_threads=2)  # noqa: E731
+        extract = lambda st: (qr_extract_r(st),)                    # noqa: E731
+
+    stores = {k: [to_tiles(mat, B) for _ in range(3)]
+              for k in ("dynamic", "replay", "compiled")}
+    cache = GraphCache()
+    dyn, _ = _factor_with("dynamic", None, builder, extract,
+                          stores["dynamic"])
+    rep, _ = _factor_with("replay", cache, builder, extract,
+                          stores["replay"])
+    cmp_, report = _factor_with("compiled", cache, builder, extract,
+                                stores["compiled"])
+    for d, r, c in zip(dyn, rep, cmp_):
+        assert (d == r).all()
+        assert (d == c).all()
+    assert report.plan.mode == "compiled"
+    assert 0.0 <= report.stats["dispatch_overhead_fraction"] < 1.0
+    assert report.stats["fused_tasks"] >= 1
+
+
+def test_compiled_decode_tokens_identical():
+    import jax.numpy as jnp
+
+    from repro.models import DecodeShard, DecodeState, build_decode_graph
+
+    vocab = 7
+
+    def toy_decode(params, cache, tok):
+        h = cache["h"] * 31 + tok[:, 0] + 7
+        logits = jnp.stack(
+            [jnp.sin(h[:, None] * (i + 1)).astype(jnp.float32)
+             for i in range(vocab)], axis=-1)
+        return {"h": h}, logits
+
+    def fresh_state(n_shards=3):
+        shards = [
+            DecodeShard(cache={"h": jnp.full((1,), s + 1, jnp.int32)},
+                        tok=jnp.full((1, 1), s, jnp.int32))
+            for s in range(n_shards)
+        ]
+        return DecodeState(params=None, shards=shards)
+
+    def loop(run):
+        state = fresh_state()
+        for _ in range(6):
+            run(build_decode_graph(state, toy_decode))
+        return np.asarray(state.tokens())
+
+    with repro.Session(1) as s:
+        tok_dyn = loop(s.run)
+    reports = []
+    with repro.Session(1, scheduler="compiled") as s:
+        tok_cmp = loop(lambda g: reports.append(s.run(g)))
+    assert (tok_dyn == tok_cmp).all()
+    assert reports[0].plan.mode == "record"
+    assert all(r.plan.mode == "compiled" for r in reports[1:])
+
+
+def test_session_map_parity_across_schedulers():
+    """session.map plans once and reuses the plan for the whole sweep; the
+    compiled sweep must match per-call dynamic runs bit-for-bit."""
+    mats = [random_spd(NB * B, seed=s) for s in (11, 12, 13)]
+
+    dyn = []
+    with repro.Session(2) as s:
+        for m in mats:
+            st = to_tiles(m, B)
+            s.run(build_cholesky_graph(NB, B, store=st))
+            dyn.append(np.asarray(cholesky_extract(st)))
+
+    stores = [to_tiles(m, B) for m in mats]
+    with repro.Session(2, scheduler="compiled") as s:
+        reports = s.map(lambda st: build_cholesky_graph(NB, B, store=st),
+                        stores)
+    got = [np.asarray(cholesky_extract(st)) for st in stores]
+    for d, c in zip(dyn, got):
+        assert (d == c).all()
+    assert reports[0].plan.mode == "record"
+    assert [r.plan.mode for r in reports[1:]] == ["compiled", "compiled"]
+
+
+# ---------------------------------------------------------------------------
+# ReplayPool promotion ladder
+# ---------------------------------------------------------------------------
+def test_pool_promotes_after_clean_replays_and_serves_compiled():
+    a = random_spd(NB * B, seed=5)
+    with Runtime(1) as rt:
+        st = to_tiles(a, B)
+        rt.run(build_cholesky_graph(NB, B, store=st))
+        ref = np.asarray(cholesky_extract(st))
+
+    modes, runs = [], []
+    with ReplayPool(warmup_runs=1, compile_after=2) as pool:
+        for _ in range(7):
+            st = to_tiles(a, B)
+            run = pool.serve(build_cholesky_graph(NB, B, store=st), 1)
+            modes.append(run.mode)
+            runs.append(run)
+            assert (np.asarray(cholesky_extract(st)) == ref).all()
+        assert modes[:2] == ["warmup", "record"]
+        assert modes[2:4] == ["replay", "replay"]
+        assert all(m == "compiled" for m in modes[4:])
+        stats = runs[-1].stats
+        assert stats["compiles"] == 1
+        assert stats["compiled_serves"] == 3
+        assert "compiled_stats" in stats
+        assert 0.0 <= \
+            stats["compiled_stats"]["dispatch_overhead_fraction"] < 1.0
+        # the lowering's meta landed in the pool's cache
+        rec = runs[-1].recording
+        meta = pool.cache.lookup_plan_meta(rec.digest, 1, "hybrid")
+        assert meta is not None
+        assert CompiledPlanMeta.from_dict(meta).digest == rec.digest
+
+
+def test_pool_demotes_on_compiled_failure_then_repromotes():
+    a = random_spd(NB * B, seed=6)
+
+    class _Broken:
+        stats = {}
+
+        def run(self, graph, check_digest=False):
+            raise CompiledRunError("injected stall")
+
+    with ReplayPool(warmup_runs=1, compile_after=2) as pool:
+        def serve():
+            st = to_tiles(a, B)
+            return pool.serve(build_cholesky_graph(NB, B, store=st), 1)
+
+        for _ in range(5):
+            run = serve()
+        assert run.mode == "compiled"
+        entry = next(iter(pool._entries.values()))
+        entry.compiled = _Broken()
+        run = serve()                       # failed compiled serve -> replay
+        assert run.mode == "replay"
+        assert run.stats["compile_failures"] == 1
+        assert entry.compiled is None       # clean streak must be re-earned
+        run = serve()                       # second clean replay...
+        assert run.mode == "replay"
+        run = serve()                       # ...then promoted again
+        assert run.mode == "compiled"
+        assert run.stats["compiles"] == 2
+
+
+# ---------------------------------------------------------------------------
+# GraphCache plan-meta round trip
+# ---------------------------------------------------------------------------
+def test_cache_plan_meta_persists_and_drops_on_swap(tmp_path):
+    _, _, g, rec = _record_cholesky(workers=2)
+    meta = compile_recording(g, rec).meta
+
+    cache = GraphCache(tmp_path)
+    cache.store(rec)
+    cache.store_plan_meta(rec.digest, rec.n_workers, "hybrid",
+                          meta.to_dict())
+    got = cache.lookup_plan_meta(rec.digest, rec.n_workers, "hybrid")
+    assert CompiledPlanMeta.from_dict(got) == meta
+    # a cold process sees the same lowering shape without recompiling
+    warm = GraphCache(tmp_path)
+    got = warm.lookup_plan_meta(rec.digest, rec.n_workers, "hybrid")
+    assert CompiledPlanMeta.from_dict(got) == meta
+    assert warm.lookup_plan_meta(rec.digest, rec.n_workers + 1,
+                                 "hybrid") is None
+    # swapping in a fresh recording stales any cached lowering
+    cache.swap(rec)
+    assert cache.lookup_plan_meta(rec.digest, rec.n_workers,
+                                  "hybrid") is None
