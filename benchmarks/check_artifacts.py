@@ -8,12 +8,13 @@ themselves guarded:
 * **wellformed** — every bench JSON artifact has its expected ``bench``
   name and non-empty rows; every row honoring an ``identical`` /
   ``no_slower`` contract actually honors it; ``BENCH_runtime.json`` must
-  carry ``suspend_frames``, ``victim_frames`` and ``compiled_linalg`` rows
-  (and per-row noise spreads, the perf gate's food);
-  ``BENCH_serving.json`` must carry ``serving_poisson`` continuous-batching
-  rows with the full latency/throughput column set, plus
+  carry ``suspend_frames``, ``victim_frames``, ``compiled_linalg`` and
+  ``async_overlap`` rows (and per-row noise spreads, the perf gate's
+  food); ``BENCH_serving.json`` must carry ``serving_poisson``
+  continuous-batching rows with the full latency/throughput column set,
   ``serving_compiled`` rows (including workers=4, the dispatch-collapse
-  count) with the full compiled column set.
+  count) with the full compiled column set, plus ``serving_procs``
+  multi-process sharding rows with the full procs column set.
 * **noise** — the per-row repeat-spread table ((max-min)/min across bench
   repeats) printed to stdout and appended to ``$GITHUB_STEP_SUMMARY``,
   building the noise-floor dataset ``benchmarks/perf_gate`` thresholds
@@ -51,6 +52,14 @@ COMPILED_COLUMNS = (
     "speedup_vs_dynamic", "speedup_vs_replay",
     "compiled_overhead_fraction", "replay_overhead_fraction",
     "segments", "fused_tasks", "identical", "noise",
+)
+
+#: columns every multi-process serving row must report (the perf gate
+#: consumes single_tok_s/procs_tok_s; ``identical`` certifies the sharded
+#: streams matched single-process bit-for-bit)
+PROCS_COLUMNS = (
+    "procs", "workers", "rate", "procs_tok_s", "single_tok_s",
+    "speedup", "warm_hit_rate", "identical", "noise",
 )
 
 
@@ -93,6 +102,8 @@ def check_rows(path: str, out: Dict, bench: str) -> None:
             raise ArtifactError(f"{path}: missing victim_frames rows")
         if not any(r["bench"] == "compiled_linalg" for r in rows):
             raise ArtifactError(f"{path}: missing compiled_linalg rows")
+        if not any(r["bench"] == "async_overlap" for r in rows):
+            raise ArtifactError(f"{path}: missing async_overlap rows")
         for row in rows:
             if "noise" not in row:
                 raise ArtifactError(
@@ -111,6 +122,19 @@ def check_rows(path: str, out: Dict, bench: str) -> None:
             if missing:
                 raise ArtifactError(
                     f"{path}: serving_compiled row missing {missing}: {row}")
+        procs = [r for r in rows if r["bench"] == "serving_procs"]
+        if not procs:
+            raise ArtifactError(
+                f"{path}: missing serving_procs (multi-process sharded "
+                "serving) rows")
+        for row in procs:
+            missing = [c for c in PROCS_COLUMNS if c not in row]
+            if missing:
+                raise ArtifactError(
+                    f"{path}: serving_procs row missing {missing}: {row}")
+            if not 0.0 <= row["warm_hit_rate"] <= 1.0:
+                raise ArtifactError(
+                    f"{path}: warm_hit_rate out of range: {row}")
         poisson = [r for r in rows if r["bench"] == "serving_poisson"]
         if not poisson:
             raise ArtifactError(

@@ -76,11 +76,20 @@ CONTRACTS: Dict[str, Tuple[str, str]] = {
     # stats-driven frame-aware victim selection must not regress the
     # paper's hybrid policy on the skewed fan-in shape it targets
     "victim_frames": ("frame_ms", "hybrid_ms"),
+    # sharded multi-process serving must sustain at least the best
+    # single-process pooled throughput at equal total worker count
+    # (ratio is single/procs so "bigger = sharding regressed")
+    "serving_procs": ("single_tok_s", "procs_tok_s"),
+    # async Session.submit pipelining must be no slower than the same
+    # graph stream awaited serially
+    "async_overlap": ("overlap_ms", "serial_ms"),
 }
 
 
 def row_key(row: Dict) -> str:
     key = f"{row['bench']}/w{row['workers']}"
+    if "procs" in row:
+        key += f"/p{row['procs']}"
     if "rate" in row:
         key += f"/r{row['rate']:g}"
     return key

@@ -17,9 +17,17 @@ stream of single-prompt requests flows through a bounded admission queue
 into per-step dynamically composed batches, with early exit on each
 request's token budget and warm pool replays per batch shape.
 
+``--procs N`` (poisson only) shards the request stream across N worker
+processes (:mod:`repro.mp`), each hosting its own executor pool; children
+rebuild the model from the same seed via :func:`make_serving_fns` and
+adopt parent-seeded recordings through ``--cache-dir``, so the sharded
+token streams stay bit-identical to single-process serving.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32 --scheduler pool
       PYTHONPATH=src python examples/serve_lm.py --arrivals poisson \
           --rate 100 --requests 12 --scheduler pool
+      PYTHONPATH=src python examples/serve_lm.py --arrivals poisson \
+          --rate 100 --requests 16 --scheduler pool --procs 2
 """
 
 import argparse
@@ -33,6 +41,22 @@ from repro.configs import get_config
 from repro.models import (build_decode_graph, decode_step, greedy_sample,
                           init_params, make_decode_state, prefill)
 from repro.replay import GraphCache
+
+
+def make_serving_fns(arch="qwen3-14b", prompt_len=64, tokens=32):
+    """Engine-fns factory for ``--procs``: worker processes re-import this
+    by reference (``serve_lm:make_serving_fns``) and rebuild the exact
+    parent model — same reduced config, same ``PRNGKey(0)`` params, same
+    jitted step fns — so sharded token streams stay bit-identical to
+    single-process serving."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_len = prompt_len + tokens + 1
+    prefill_fn = jax.jit(
+        lambda p, b: prefill(p, cfg, b, None, max_len=max_len))
+    decode_fn = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, None))
+    return (lambda cache, tok: decode_fn(params, cache, tok),
+            lambda prompt: prefill_fn(params, {"tokens": prompt}))
 
 
 def serve_poisson(args, cfg, params, prefill_fn, decode_fn):
@@ -50,11 +74,24 @@ def serve_poisson(args, cfg, params, prefill_fn, decode_fn):
                                vocab_size=cfg.vocab_size)
     print(f"arch={cfg.name} scheduler={args.scheduler} "
           f"workers={args.workers} max_batch={args.max_batch} "
-          f"{workload.describe()}")
+          + (f"procs={args.procs} " if args.procs else "")
+          + workload.describe())
     pool = args.scheduler == "pool"
     cache_store = (GraphCache(args.cache_dir)
                    if args.cache_dir and pool else None)
     kwargs = {"pool_kwargs": {"warmup_runs": 0}} if pool else {}
+    engine_kwargs = {}
+    if args.procs:
+        kwargs["procs"] = args.procs
+        # children rebuild the model by import reference — see
+        # make_serving_fns; launch as `python examples/serve_lm.py` so the
+        # examples dir is on sys.path for the spawned workers
+        engine_kwargs = {
+            "procs": args.procs,
+            "fns_ref": ("serve_lm:make_serving_fns",
+                        {"arch": args.arch, "prompt_len": args.prompt_len,
+                         "tokens": args.tokens}),
+        }
     with repro.Session(args.workers, scheduler=args.scheduler,
                        cache=cache_store, trace=bool(args.trace),
                        **kwargs) as session:
@@ -62,12 +99,22 @@ def serve_poisson(args, cfg, params, prefill_fn, decode_fn):
             session,
             lambda cache, tok: decode_fn(params, cache, tok),
             lambda prompt: prefill_fn(params, {"tokens": prompt}),
-            max_batch=args.max_batch)
-        engine.prime()     # step graphs + keys built before traffic starts
+            max_batch=args.max_batch, **engine_kwargs)
+        if not args.procs:
+            engine.prime()  # step graphs + keys built before traffic starts
         report = engine.run(workload.requests())
-        if pool:
+        if pool and not args.procs:
             for ckey, stats in session.pool.describe().items():
                 print(f"pool[{ckey[:20]}…]: {stats}")
+        if args.procs:
+            for s in engine.mp_stats["per_proc"]:
+                print(f"proc{s['proc']}[pid {s['pid']}]: "
+                      f"{s['completed']} requests, {s['steps']} steps "
+                      f"({s['warm_steps']} warm), {s['records']} records")
+            if engine.mp_stats["dead"]:
+                print(f"dead workers {engine.mp_stats['dead']}: "
+                      f"{engine.mp_stats['fallback']} requests re-served "
+                      "in-process")
     print(report.describe())
     s = report.summary()
     print(f"per-token p50/p99: {s['p50_tok_ms']:.2f}/{s['p99_tok_ms']:.2f} "
@@ -119,11 +166,21 @@ def main():
                     help="continuous-batching decode slots")
     ap.add_argument("--seed", type=int, default=0,
                     help="poisson workload seed (same seed, same stream)")
+    ap.add_argument("--procs", type=int, default=0,
+                    help="shard the poisson stream across N worker "
+                         "processes (repro.mp), each with --workers "
+                         "runtime workers; token streams stay bit-"
+                         "identical to --procs 0")
     args = ap.parse_args()
     if args.trace and args.scheduler == "jit":
         ap.error("--trace needs a task-graph scheduler (dynamic or pool)")
     if args.arrivals == "poisson" and args.scheduler == "jit":
         ap.error("--arrivals poisson needs a task-graph scheduler")
+    if args.procs and args.arrivals != "poisson":
+        ap.error("--procs shards the streaming front end; add "
+                 "--arrivals poisson")
+    if args.procs and args.trace:
+        ap.error("--trace is per-process; not supported with --procs")
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))

@@ -64,6 +64,22 @@ class CoreRegistry:
         with self._lock:
             return dict(self._refs)
 
+    def shutdown_all(self) -> None:
+        """Force-stop every registered core regardless of refcounts.
+
+        For process teardown paths where no lessee will ever release —
+        a :mod:`repro.mp` worker child exiting on parent death must not
+        leave worker threads spinning while the interpreter finalizes.
+        Leases handed out before this call become dead handles; the
+        registry itself stays usable (a later acquire builds fresh cores).
+        """
+        with self._lock:
+            cores = list(self._cores.values())
+            self._cores.clear()
+            self._refs.clear()
+        for core in cores:
+            core.shutdown()
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._cores)

@@ -1,0 +1,40 @@
+"""Multi-process execution pool: processes for parallelism, recordings
+for dispatch.
+
+The in-process executors hit a single-interpreter ceiling: every dispatch
+path contends on the GIL, so adding worker *threads* stops buying
+parallelism (the flight recorder measured dispatch overhead growing from
+3% to 59% of worker time between 1 and 4 workers).  This package shards
+work across worker *processes* instead — each child hosts its own shared
+:class:`~repro.exec.core.ExecutorCore` + serving pool — while recordings
+and compiled-plan metadata ship through the existing on-disk
+:class:`~repro.replay.cache.GraphCache`, so children replay warm without
+paying their own recording runs.
+
+Entry points:
+
+* :class:`ProcessPool` / :class:`WorkerSpec` — the raw pool (spawn-safe
+  request pipe, seq-matched :class:`RunFuture` results, daemon children
+  that die with the parent);
+* ``Session(procs=N)`` routes :meth:`~repro.api.session.Session.map`
+  through the pool and exposes :meth:`Session.process_pool`;
+* ``ContinuousBatchingEngine(procs=N, fns_ref=...)`` shards serving
+  requests by rid across child engines with bit-identical per-request
+  streams;
+* :func:`callable_ref` / :func:`resolve_ref` — the "code ships by import
+  reference, never by pickle" contract.
+"""
+
+from .futures import FutureTimeout, RunFuture, WorkerDied, WorkerError
+from .pool import ProcessPool, WorkerSpec, callable_ref, resolve_ref
+
+__all__ = [
+    "FutureTimeout",
+    "ProcessPool",
+    "RunFuture",
+    "WorkerDied",
+    "WorkerError",
+    "WorkerSpec",
+    "callable_ref",
+    "resolve_ref",
+]

@@ -1,0 +1,69 @@
+"""Module-level task bodies shipped to pool workers by reference.
+
+``session.map(builder, inputs)`` with ``procs=N`` round-robins inputs to
+worker processes as ``run_builder`` calls: the child resolves the builder
+ref, builds its own graph from the input, runs it through the child
+session (adopting the parent's recordings from the shared on-disk cache
+when one is configured) and sends back a compact, picklable outcome —
+results, plan mode, scheduler stats, wall clock.  Jax arrays in the
+results are converted to numpy so the payload pickles without a device
+runtime on the parent's unpickling path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from .pool import resolve_ref
+
+__all__ = ["run_builder"]
+
+
+def _portable(value: Any) -> Any:
+    """Best-effort conversion of array-likes (jax) to plain numpy so the
+    result pickles cheaply across the pipe; everything else passes
+    through."""
+    try:
+        import numpy as np
+        if hasattr(value, "__array__") and not isinstance(value, np.ndarray):
+            return np.asarray(value)
+    except Exception:
+        pass
+    return value
+
+
+def _portable_stats(stats: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in stats.items():
+        if isinstance(v, (int, float, str, bool, type(None))):
+            out[k] = v
+        elif isinstance(v, dict):
+            out[k] = _portable_stats(v)
+        else:
+            out[k] = repr(v)
+    return out
+
+
+def run_builder(ctx: Any, ref: str, value: Any, *,
+                record: Any = None, timeout: float = 300.0) -> Dict[str, Any]:
+    """Build ``resolve_ref(ref)(value)`` and run it on the child session.
+
+    Returns a plain dict (never a live RunReport — graphs, recordings and
+    traces stay in the child): ``results`` keyed by tid, the executed plan
+    ``mode`` (``replay``/``pool``/... — ``pool_mode`` distinguishes adopt
+    vs record for pool sessions), the run ``stats`` and ``wall_s``.
+    """
+    builder = resolve_ref(ref)
+    graph = builder(value)
+    report = ctx.session.run(graph, record=record, timeout=timeout)
+    return {
+        "results": {tid: _portable(v) for tid, v in report.results.items()},
+        "mode": report.plan.mode,
+        "remapped_from": report.plan.remapped_from,
+        "digest": report.plan.digest,
+        "stats": _portable_stats(report.stats),
+        "wall_s": report.wall_s,
+        "n_workers": report.n_workers,
+        "scheduler": report.scheduler,
+        "proc": ctx.index,
+    }

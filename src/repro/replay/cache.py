@@ -25,15 +25,35 @@ rides alongside recordings under the same cache key as ``<ckey>.plan.json``
 while the executable itself stays memory-only.  Swapping or invalidating a
 recording drops its plan metadata too (a new recording means a stale
 lowering).
+
+Cross-process safety: the cache directory is the :mod:`repro.mp` shipment
+channel, so several *processes* write it concurrently.  Every disk write
+goes to a per-writer unique temp file (pid + counter — two writers can
+never interleave bytes in one temp path) followed by an atomic
+``os.replace``, under an advisory ``fcntl`` lock on ``<file>.lock`` that
+serializes writer pairs (and the unlink paths).  Readers never lock:
+rename atomicity guarantees they see a complete old or complete new file,
+and anything torn by a crashed writer is quarantined as usual.  Note the
+*in-memory* layer is per-instance: a long-lived ``GraphCache`` does not
+see another process's swap/invalidate until the key misses in memory —
+cross-process consumers (pool worker children) open their own instance
+per adoption, which reads through to disk.
 """
 
 from __future__ import annotations
 
+import contextlib
+import itertools
 import json
 import os
 import re
 import threading
-from typing import Dict, List, Optional, Union
+from typing import Dict, Iterator, List, Optional, Union
+
+try:                                     # POSIX advisory locks; the cache
+    import fcntl                         # degrades to rename-only atomicity
+except ImportError:                      # on platforms without fcntl
+    fcntl = None                         # type: ignore[assignment]
 
 from ..core.taskgraph import TaskGraph
 from .graph_key import GraphKey, graph_key
@@ -46,6 +66,48 @@ def cache_key(key: Union[GraphKey, str], n_workers: int, policy: str) -> str:
 
 
 _CKEY_RE = re.compile(r"^(?P<digest>[0-9a-f]{32})_w(?P<workers>\d+)_(?P<policy>.+)$")
+
+#: per-process unique temp-file suffixes: concurrent writers (threads in
+#: one process, or several processes via the pid component) never share a
+#: temp path, so a torn interleaved write is structurally impossible
+_TMP_COUNTER = itertools.count()
+
+
+@contextlib.contextmanager
+def _file_lock(target: str) -> Iterator[None]:
+    """Advisory exclusive lock on ``target + ".lock"`` (no-op without
+    fcntl).  The lock file deliberately does not end in ``.json`` so the
+    :meth:`GraphCache.candidates` directory scan never sees it."""
+    if fcntl is None:
+        yield
+        return
+    fd = os.open(target + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+    finally:
+        os.close(fd)
+
+
+def _atomic_write_json(target: str, payload: dict) -> None:
+    """Write ``payload`` to ``target`` so that no reader — same process or
+    another — can ever observe torn JSON: unique temp file, fsync-free
+    atomic rename, advisory lock across the pair."""
+    tmp = f"{target}.{os.getpid()}.{next(_TMP_COUNTER)}.tmp"
+    with _file_lock(target):
+        try:
+            with open(tmp, "w") as fh:
+                json.dump(payload, fh)
+            os.replace(tmp, target)
+        finally:
+            if os.path.exists(tmp):      # failed mid-write: never leak tmps
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
 
 
 class GraphCache:
@@ -108,10 +170,7 @@ class GraphCache:
     def _write(self, ckey: str, recording: Recording) -> None:
         f = self._file_for(ckey)
         if f is not None:
-            tmp = f + ".tmp"
-            with open(tmp, "w") as fh:
-                json.dump(recording.to_dict(), fh)
-            os.replace(tmp, f)
+            _atomic_write_json(f, recording.to_dict())
 
     def store(self, recording: Recording) -> str:
         """Cache ``recording`` (and persist it when on-disk).  Returns the
@@ -138,10 +197,7 @@ class GraphCache:
             self._plan_meta[ckey] = dict(meta)
         f = self._plan_file_for(ckey)
         if f is not None:
-            tmp = f + ".tmp"
-            with open(tmp, "w") as fh:
-                json.dump(meta, fh)
-            os.replace(tmp, f)
+            _atomic_write_json(f, meta)
         return ckey
 
     def lookup_plan_meta(self, key: Union[GraphKey, str], n_workers: int,
@@ -171,7 +227,8 @@ class GraphCache:
         f = self._plan_file_for(ckey)
         if f is not None and os.path.exists(f):
             try:
-                os.remove(f)
+                with _file_lock(f):
+                    os.remove(f)
             except OSError:
                 pass
 
@@ -205,7 +262,8 @@ class GraphCache:
         f = self._file_for(ckey)
         if f is not None and os.path.exists(f):
             try:
-                os.remove(f)
+                with _file_lock(f):
+                    os.remove(f)
                 dropped = True
             except OSError:
                 pass

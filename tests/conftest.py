@@ -43,6 +43,27 @@ def _no_worker_thread_leaks():
 
 
 @pytest.fixture(autouse=True, scope="session")
+def _no_orphaned_child_processes():
+    """Assert no :mod:`repro.mp` worker process outlives the suite — the
+    process analogue of the thread-leak check.  ``ProcessPool.shutdown``
+    joins and closes every child (and a dying parent's children exit on
+    pipe EOF), so anything still in ``multiprocessing.active_children()``
+    at session end is a real orphan."""
+    yield
+    import multiprocessing
+
+    deadline = time.monotonic() + 10.0
+    leaked = multiprocessing.active_children()
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.05)          # grace period for terminate/join races
+        leaked = multiprocessing.active_children()
+    assert not leaked, (
+        f"orphaned-process leak: {len(leaked)} worker process(es) still "
+        f"alive after the suite: "
+        f"{sorted((p.name, p.pid) for p in leaked)}")
+
+
+@pytest.fixture(autouse=True, scope="session")
 def _no_orphaned_frames():
     """Assert no suspended task frame stays parked on a channel/event when
     the suite ends — the frame analogue of the thread-leak check: an

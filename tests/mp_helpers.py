@@ -1,0 +1,172 @@
+"""Module-level helpers shipped to repro.mp worker processes by reference.
+
+The tests directory has no ``__init__.py``, so pytest puts it on
+``sys.path`` and these helpers import inside spawned children as the
+top-level module ``mp_helpers`` — which is exactly what
+:func:`repro.mp.callable_ref` derives.  Everything here must stay
+module-level and picklable-by-reference: no closures, no fixtures.
+"""
+
+import os
+import time
+
+import numpy as np
+
+import repro
+
+VOCAB = 13
+PRIME = 10_007
+
+
+# ---------------------------------------------------------------------------
+# toy hash-walk LM (mirrors tests/test_serving_engine.py): per-request
+# integer caches, so token streams are independent of batch composition
+def _logits(h):
+    row = [0.0] * VOCAB
+    row[h % VOCAB] = 1.0
+    return row
+
+
+def toy_prefill(prompt):
+    h = (int(np.asarray(prompt).sum()) * 31 + 7) % PRIME
+    return {"h": h}, _logits(h)
+
+
+def toy_decode(cache, tok):
+    h = (cache["h"] * 31 + int(tok) + 7) % PRIME
+    return {"h": h}, _logits(h)
+
+
+def toy_sample(logits):
+    return int(np.argmax(np.asarray(logits)))
+
+
+def make_toy_fns():
+    """Engine-fns factory for ``fns_ref`` (child processes re-import it)."""
+    return toy_decode, toy_prefill, toy_sample
+
+
+def make_slow_toy_fns(delay=0.002):
+    """Toy fns whose decode sleeps ``delay`` seconds — keeps a serving
+    stream in flight long enough for chaos tests to kill a child mid-run."""
+    def slow_decode(cache, tok):
+        time.sleep(delay)
+        return toy_decode(cache, tok)
+    return slow_decode, toy_prefill, toy_sample
+
+
+def per_request_reference(requests):
+    """Each request decoded alone, straight through the toy model — the
+    ground truth any batched/sharded serve must match bit-for-bit."""
+    out = {}
+    for req in requests:
+        cache, logits = toy_prefill(req.prompt)
+        tok = toy_sample(logits)
+        toks = [tok]
+        while len(toks) < req.max_new_tokens and tok != req.eos_token:
+            cache, logits = toy_decode(cache, tok)
+            tok = toy_sample(logits)
+            toks.append(tok)
+        out[req.rid] = toks
+    return out
+
+
+# ---------------------------------------------------------------------------
+# graph builders (same shape for every input -> one cache key per sweep)
+def build_chain(x):
+    g = repro.Graph("mp-chain")
+    a = g.add(lambda: x, name="src")
+    b = g.add(lambda v: v + 1, a, name="inc")
+    g.add(lambda v: v * 2, b, name="dbl")
+    return g
+
+
+def chain_expected(x):
+    return {x, x + 1, (x + 1) * 2}
+
+
+# ---------------------------------------------------------------------------
+# plain worker tasks (fn(ctx, *args) protocol)
+def whoami(ctx):
+    return {"pid": os.getpid(), "index": ctx.index}
+
+
+def echo(ctx, value):
+    return value
+
+
+def add(ctx, a, b):
+    return a + b
+
+
+def boom(ctx, message):
+    raise ValueError(message)
+
+
+def hang(ctx, seconds):
+    time.sleep(seconds)
+    return "woke"
+
+
+def init_marker(ctx):
+    """WorkerSpec.init target: runs once at child-session build time."""
+    return {"init_pid": os.getpid(), "index": ctx.index}
+
+
+def get_state(ctx):
+    ctx.session                       # force the lazy session (runs init)
+    return ctx.state
+
+
+# ---------------------------------------------------------------------------
+# GraphCache cross-process helpers (each call opens a FRESH instance so it
+# reads through to disk — the documented cross-process consumption pattern)
+def seed_recording(ctx, path, workers=2):
+    """Record one real graph into the cache at ``path``; returns its key
+    coordinates for later cross-process lookups."""
+    from repro.replay import GraphCache
+    cache = GraphCache(path)
+    with repro.Session(workers, scheduler="replay", cache=cache) as s:
+        rep = s.run(build_chain(1))
+    return {"digest": rep.plan.digest, "workers": workers,
+            "policy": s.policy, "pid": os.getpid()}
+
+
+def cache_hammer(ctx, path, iters, workers=2):
+    """Hammer the on-disk cache with store/swap/plan-meta writes of the
+    same key — run on two processes at once, this is a true writer race
+    on one target file."""
+    from repro.replay import GraphCache
+    cache = GraphCache(path)
+    with repro.Session(workers, scheduler="replay", cache=cache) as s:
+        rep = s.run(build_chain(1))
+    rec = rep.recording
+    if rec is None:                   # this process adopted; read it back
+        rec = cache.lookup(rep.plan.digest, workers, s.policy)
+    for i in range(iters):
+        cache.store(rec)
+        cache.swap(rec)
+        cache.store_plan_meta(rec.digest, rec.n_workers, rec.policy,
+                              {"pid": os.getpid(), "iter": i})
+    return {"pid": os.getpid(), "digest": rec.digest, "writes": 3 * iters}
+
+
+def store_plan_meta(ctx, path, digest, workers, policy, meta):
+    from repro.replay import GraphCache
+    return GraphCache(path).store_plan_meta(digest, workers, policy, meta)
+
+
+def lookup_plan_meta(ctx, path, digest, workers, policy):
+    from repro.replay import GraphCache
+    return GraphCache(path).lookup_plan_meta(digest, workers, policy)
+
+
+def swap_same_recording(ctx, path, digest, workers, policy):
+    """Re-swap the on-disk recording for this key (drops its plan meta on
+    disk — the event a *second* process must observe)."""
+    from repro.replay import GraphCache
+    cache = GraphCache(path)
+    rec = cache.lookup(digest, workers, policy)
+    assert rec is not None, "nothing to swap: seed the cache first"
+    cache.swap(rec)
+    return True

@@ -37,11 +37,24 @@ def _compiled_row(**over):
     return row
 
 
+def _procs_row(**over):
+    row = {
+        "bench": "serving_procs", "procs": 2, "workers": 1, "rate": 60.0,
+        "procs_tok_s": 430.0, "single_tok_s": 410.0, "speedup": 1.05,
+        "warm_hit_rate": 0.9, "identical": True, "noise": 0.1,
+        "no_slower": True,
+    }
+    row.update(over)
+    return row
+
+
 def _runtime_extra_rows():
     return [
         {"bench": "victim_frames", "workers": 2, "noise": 0.05,
          "no_slower": True},
         {"bench": "compiled_linalg", "workers": 2, "noise": 0.2,
+         "no_slower": True},
+        {"bench": "async_overlap", "workers": 2, "noise": 0.1,
          "no_slower": True},
     ]
 
@@ -68,6 +81,7 @@ def artifacts(tmp_path):
         "rows": [
             {"bench": "serving", "workers": 1, "identical": True},
             _compiled_row(),
+            _procs_row(),
             _poisson_row(),
         ],
     })
@@ -161,19 +175,51 @@ def test_wellformed_requires_poisson_rows_and_columns(tmp_path):
     p = _write(tmp_path, "BENCH_serving.json", {
         "bench": "serving",
         "rows": [{"bench": "serving", "workers": 1, "identical": True},
-                 _compiled_row()]})
+                 _compiled_row(), _procs_row()]})
     with pytest.raises(ArtifactError, match="serving_poisson"):
         check_wellformed([p])
     row = _poisson_row()
     del row["warm_hit_rate"]
     p = _write(tmp_path, "BENCH_serving.json",
-               {"bench": "serving", "rows": [_compiled_row(), row]})
+               {"bench": "serving",
+                "rows": [_compiled_row(), _procs_row(), row]})
     with pytest.raises(ArtifactError, match="warm_hit_rate"):
         check_wellformed([p])
     p = _write(tmp_path, "BENCH_serving.json",
-               {"bench": "serving", "rows": [_compiled_row(), _poisson_row(
-                   warm_hit_rate=1.5)]})
+               {"bench": "serving",
+                "rows": [_compiled_row(), _procs_row(), _poisson_row(
+                    warm_hit_rate=1.5)]})
     with pytest.raises(ArtifactError, match="out of range"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_procs_rows_and_columns(tmp_path):
+    p = _write(tmp_path, "BENCH_serving.json", {
+        "bench": "serving",
+        "rows": [_compiled_row(), _poisson_row()]})
+    with pytest.raises(ArtifactError, match="serving_procs"):
+        check_wellformed([p])
+    row = _procs_row()
+    del row["single_tok_s"]
+    p = _write(tmp_path, "BENCH_serving.json",
+               {"bench": "serving",
+                "rows": [_compiled_row(), row, _poisson_row()]})
+    with pytest.raises(ArtifactError, match="single_tok_s"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_serving.json",
+               {"bench": "serving",
+                "rows": [_compiled_row(), _procs_row(warm_hit_rate=-0.1),
+                         _poisson_row()]})
+    with pytest.raises(ArtifactError, match="out of range"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_async_overlap_rows(tmp_path):
+    rows = [{"bench": "suspend_frames", "workers": 2, "noise": 0.1}] + [
+        r for r in _runtime_extra_rows() if r["bench"] != "async_overlap"]
+    p = _write(tmp_path, "BENCH_runtime.json",
+               {"bench": "runtime", "rows": rows})
+    with pytest.raises(ArtifactError, match="async_overlap"):
         check_wellformed([p])
 
 

@@ -1,0 +1,248 @@
+"""Tests for the multi-process execution pool (repro.mp).
+
+Covers the pipe protocol (futures, remote errors, timeouts, death), the
+cross-process GraphCache shipment channel (writer races, plan-meta
+round-trips), and the Session integration (async ``submit``, sharded
+``map(procs=N)`` with recording adoption).  Everything here spawns real
+processes -> ``pytest.mark.mp``.
+"""
+
+import json
+import multiprocessing
+import os
+import threading
+import time
+
+import pytest
+
+import mp_helpers
+import repro
+from repro.api.session import PlanError
+from repro.mp import (
+    FutureTimeout,
+    ProcessPool,
+    WorkerDied,
+    WorkerError,
+    WorkerSpec,
+    callable_ref,
+)
+from repro.replay import GraphCache
+
+pytestmark = pytest.mark.mp
+
+
+# ---------------------------------------------------------------------------
+# protocol / lifecycle
+def test_pool_roundtrip_ping_and_submit():
+    with ProcessPool(2, WorkerSpec(workers=1)) as pool:
+        assert pool.ping(0, "tok") == "tok"
+        assert pool.ping(1, {"nested": [1, 2]}) == {"nested": [1, 2]}
+        ids = [pool.submit(mp_helpers.whoami, proc=p).result(timeout=60)
+               for p in (0, 1)]
+        assert [w["index"] for w in ids] == [0, 1]
+        assert len({w["pid"] for w in ids}) == 2          # real processes
+        assert all(w["pid"] != os.getpid() for w in ids)
+        assert pool.submit(mp_helpers.add, 19, 23).result(timeout=60) == 42
+    assert not multiprocessing.active_children()
+
+
+def test_pool_map_round_robins_in_order():
+    with ProcessPool(2, WorkerSpec(workers=1)) as pool:
+        out = pool.map(mp_helpers.echo, list(range(7)), timeout=60)
+    assert out == list(range(7))
+
+
+def test_worker_init_builds_state_once():
+    spec = WorkerSpec(workers=1, init=callable_ref(mp_helpers.init_marker))
+    with ProcessPool(1, spec) as pool:
+        state = pool.submit(mp_helpers.get_state, proc=0).result(timeout=60)
+        assert state["index"] == 0
+        assert state["init_pid"] != os.getpid()
+        again = pool.submit(mp_helpers.get_state, proc=0).result(timeout=60)
+        assert again == state                             # built once
+
+
+def test_remote_error_ships_kind_and_traceback():
+    with ProcessPool(1, WorkerSpec(workers=1)) as pool:
+        fut = pool.submit(mp_helpers.boom, "kaboom", proc=0)
+        with pytest.raises(WorkerError) as ei:
+            fut.result(timeout=60)
+        assert ei.value.kind == "ValueError"
+        assert "kaboom" in str(ei.value)
+        assert "mp_helpers" in ei.value.remote_traceback  # child-side frames
+        # the worker survives its task's exception
+        assert pool.ping(0, "alive") == "alive"
+
+
+def test_callable_ref_rejects_closures_and_lambdas():
+    def local_fn(ctx):
+        return 1
+
+    for bad in (local_fn, (lambda ctx: 1)):
+        with pytest.raises(ValueError, match="not shippable"):
+            callable_ref(bad)
+    assert callable_ref(mp_helpers.echo) == "mp_helpers:echo"
+
+
+def test_future_timeout_fires_across_spawn_then_kill_reaps():
+    """The thread-method watchdog the suite relies on: a parent-side
+    ``result(timeout=)`` must fire while the child is wedged in a task
+    (a signal-based timeout could not interrupt this blocking recv), and
+    killing the wedged child must fail its outstanding futures."""
+    with ProcessPool(1, WorkerSpec(workers=1)) as pool:
+        fut = pool.submit(mp_helpers.hang, 60.0, proc=0)
+        t0 = time.monotonic()
+        with pytest.raises(FutureTimeout):
+            fut.result(timeout=0.5)
+        assert time.monotonic() - t0 < 5.0
+        assert not fut.done()                 # still outstanding, not dead
+        pool.kill(0)
+        with pytest.raises(WorkerDied) as ei:
+            fut.result(timeout=30)
+        assert ei.value.proc == 0
+        assert not pool.alive(0)
+    assert not multiprocessing.active_children()
+
+
+def test_dead_worker_refuses_new_requests_fast():
+    with ProcessPool(2, WorkerSpec(workers=1)) as pool:
+        pool.kill(1)
+        fut = pool.submit(mp_helpers.echo, "x", proc=1)
+        with pytest.raises(WorkerDied):
+            fut.result(timeout=30)
+        assert pool.ping(0, 1) == 1           # sibling unaffected
+
+
+# ---------------------------------------------------------------------------
+# GraphCache as the cross-process shipment channel (satellites 1 + 2)
+def test_two_process_cache_writer_race_leaves_no_torn_files(tmp_path):
+    """Two worker processes store/swap/plan-meta the SAME cache key
+    concurrently; afterwards every on-disk file must parse (atomic
+    rename + lock) and nothing may have been quarantined."""
+    path = str(tmp_path / "cache")
+    with ProcessPool(2, WorkerSpec(workers=1)) as pool:
+        futs = [pool.submit(mp_helpers.cache_hammer, path, 40, proc=p)
+                for p in (0, 1)]
+        outs = [f.result(timeout=300) for f in futs]
+    assert outs[0]["digest"] == outs[1]["digest"]
+    names = sorted(os.listdir(path))
+    assert not [n for n in names if n.endswith(".corrupt")], names
+    assert not [n for n in names if n.endswith(".tmp")], names
+    parsed = 0
+    for n in names:
+        if n.endswith(".json"):
+            with open(os.path.join(path, n)) as fh:
+                json.load(fh)                 # raises on a torn write
+            parsed += 1
+    assert parsed >= 2                        # recording + plan meta
+    # lock files must be invisible to the candidates() scan
+    cache = GraphCache(path)
+    cands = cache.candidates(outs[0]["digest"])
+    assert list(cands) == [2]
+
+
+def test_plan_meta_round_trips_across_processes(tmp_path):
+    """Meta stored by one process is read by another (fresh instance reads
+    through to disk), and a swap in process A drops the meta process B
+    observes."""
+    path = str(tmp_path / "cache")
+    meta = {"segments": 3, "fused": 5, "source": "proc0"}
+    with ProcessPool(2, WorkerSpec(workers=1)) as pool:
+        seed = pool.submit(mp_helpers.seed_recording, path, proc=0).result(
+            timeout=120)
+        args = (path, seed["digest"], seed["workers"], seed["policy"])
+        pool.submit(mp_helpers.store_plan_meta, *args, meta,
+                    proc=0).result(timeout=60)
+        # cross-process read: proc 1 never wrote this meta
+        got = pool.submit(mp_helpers.lookup_plan_meta, *args,
+                          proc=1).result(timeout=60)
+        assert got == meta
+        # swap in proc 0 stales the lowering; proc 1 must observe the drop
+        pool.submit(mp_helpers.swap_same_recording, *args,
+                    proc=0).result(timeout=60)
+        gone = pool.submit(mp_helpers.lookup_plan_meta, *args,
+                           proc=1).result(timeout=60)
+        assert gone is None
+
+
+# ---------------------------------------------------------------------------
+# Session integration: async submit + sharded map
+def test_session_submit_overlaps_build_with_execution():
+    with repro.Session(workers=1) as s:
+        futs = []
+        for i in range(5):                    # build i+1 while i runs
+            futs.append(s.submit(mp_helpers.build_chain(i)))
+        outs = [f.result(timeout=60) for f in futs]
+    for i, rep in enumerate(outs):
+        assert set(rep.results.values()) == mp_helpers.chain_expected(i)
+
+
+def test_session_submit_carries_exceptions_and_close_drains():
+    def bad_graph():
+        g = repro.Graph("bad")
+        g.add(lambda: 1 / 0, name="div")
+        return g
+
+    s = repro.Session(workers=1)
+    ok = s.submit(mp_helpers.build_chain(3))
+    bad = s.submit(bad_graph())
+    tail = s.submit(mp_helpers.build_chain(4))
+    s.close()                                 # drains: nothing dropped
+    assert set(ok.result(timeout=1).results.values()) == \
+        mp_helpers.chain_expected(3)
+    assert isinstance(bad.exception(timeout=1), ZeroDivisionError)
+    assert set(tail.result(timeout=1).results.values()) == \
+        mp_helpers.chain_expected(4)
+    with pytest.raises(PlanError):
+        s.submit(mp_helpers.build_chain(5))
+
+
+def test_session_map_shards_across_processes_with_adoption(tmp_path):
+    """map(procs=2): input 0 records in-process (seeding the shared disk
+    cache); every other input executes in a child that ADOPTS the seeded
+    recording — mode replay, no child-side recording run."""
+    cache = GraphCache(str(tmp_path / "cache"))
+    with repro.Session(2, scheduler="replay", cache=cache, procs=2) as s:
+        reports = s.map(mp_helpers.build_chain, list(range(7)))
+    assert reports[0].plan.mode == "record"   # the in-process seed
+    procs_used = set()
+    for i, rep in enumerate(reports[1:], start=1):
+        assert set(rep.results.values()) == mp_helpers.chain_expected(i)
+        assert rep.plan.mode == "replay"      # adopted, never re-recorded
+        procs_used.add(rep.stats["mp_proc"])
+    assert procs_used == {0, 1}               # round-robined both children
+
+
+def test_session_map_procs_rejects_unshippable_builder(tmp_path):
+    cache = GraphCache(str(tmp_path / "cache"))
+    with repro.Session(1, scheduler="replay", cache=cache) as s:
+        with pytest.raises(PlanError, match="import reference"):
+            s.map(lambda x: mp_helpers.build_chain(x), [1, 2], procs=2)
+
+
+def test_session_close_shuts_pool_down():
+    s = repro.Session(1, procs=2)
+    pool = s.process_pool()
+    assert pool.ping(0, 1) == 1
+    s.close()
+    deadline = time.monotonic() + 10
+    while multiprocessing.active_children() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert not multiprocessing.active_children()
+    with pytest.raises(RuntimeError):
+        pool.request(0, "ping", 1)
+
+
+def test_parent_death_sentinel_reaps_children():
+    """A pool owner that exits WITHOUT calling shutdown must not strand
+    children: the child's recv loop exits on pipe EOF.  Simulated by
+    dropping the parent-side connections."""
+    pool = ProcessPool(1, WorkerSpec(workers=1))
+    proc = pool._workers[0].process
+    pid = proc.pid
+    pool._workers[0].conn.close()             # the EOF sentinel
+    proc.join(timeout=30)
+    assert proc.exitcode == 0                 # clean exit, not a reap
+    pool.shutdown()
+    assert not multiprocessing.active_children()
+    assert pid is not None
