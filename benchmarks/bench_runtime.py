@@ -32,7 +32,14 @@ release the GIL):
 * ``async_overlap`` — ``Session.submit`` (async: the client builds request
   ``i+1`` — data prep + graph construction — while request ``i`` executes)
   vs the blocking build-then-run loop, same graphs, same warm session.
-  Contract: pipelined submission is no slower than the serial loop.
+  Contract: pipelined submission is no slower than the serial loop;
+* ``resource_contention`` — a shared-accumulator workload (skewed computes
+  each feeding an update of ONE accumulator) serialized two ways: a chain
+  of dependency *edges* between the updates (pins an order nobody needs)
+  vs one exclusive :class:`~repro.resources.Resource` shared by the
+  updates with **no cross-edges** (the arbiter serializes them in finish
+  order).  Contract: the resource variant is no slower than the edge
+  variant — conflicts-without-dependencies never lose to fake edges.
 
 Every row carries ``noise`` — the observed relative spread ``(max-min)/min``
 across its repeats — which the CI workflow surfaces per run: the first step
@@ -55,6 +62,7 @@ import numpy as np
 
 import repro
 from repro.core import Channel, TaskGraph
+from repro.resources import Resource
 
 SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
 WORKERS = (1, 2) if SMOKE else (1, 2, 4)
@@ -427,6 +435,77 @@ def bench_async_overlap(workers: int, iters: int = 8,
     }
 
 
+def contention_graph(use_resource: bool, n_tasks: int, acc: List[int],
+                     compute_s: float, write_s: float) -> TaskGraph:
+    """Skewed computes each feeding an update of ONE shared accumulator.
+    ``use_resource=False`` serializes the updates with a chain of edges
+    (update ``i`` must wait for update ``i-1`` — and task 0's compute is
+    the LONGEST, so the whole chain stalls behind it).  ``use_resource=True``
+    drops the chain: the updates share one exclusive resource and the
+    arbiter grants it in whatever order the computes finish — short
+    computes' updates overlap the long computes still running."""
+    g = TaskGraph("contend-res" if use_resource else "contend-edges")
+    accumulator = Resource("accumulator") if use_resource else None
+    prev = None
+    for i in range(n_tasks):
+        def compute(ctx, i=i):
+            time.sleep(compute_s * (n_tasks - i) / n_tasks)   # 0 = longest
+            return i
+
+        def update(ctx, i=i):
+            time.sleep(write_s)                # the guarded critical section
+            acc.append(i)
+
+        c = g.add(compute, name=f"compute{i}", kind="compute", cost=1.0)
+        deps = [c] if use_resource else [c] + ([prev] if prev is not None
+                                               else [])
+        prev = g.add(update, name=f"update{i}", kind="comm", cost=0.2,
+                     deps=deps,
+                     uses=[accumulator] if use_resource else ())
+    return g
+
+
+def bench_resources(workers: int, repeats: int = 3) -> Dict:
+    """Edge-serialized vs resource-serialized shared-accumulator updates on
+    the same warm session.  Contract: resources are no slower than edges
+    (same mutual exclusion, no fake ordering)."""
+    n_tasks = 4 if SMOKE else 8
+    compute_s = 0.004 if SMOKE else 0.01
+    write_s = 0.001 if SMOKE else 0.002
+    samples: Dict[str, List[float]] = {"edges": [], "resources": []}
+    sums: Dict[str, int] = {}
+    waits = acquires = 0
+    with repro.Session(workers) as session:
+        session.run(contention_graph(True, n_tasks, [], compute_s, write_s))
+        for _ in range(repeats):
+            for mode in ("edges", "resources"):
+                acc: List[int] = []
+                g = contention_graph(mode == "resources", n_tasks, acc,
+                                     compute_s, write_s)
+                t0 = time.perf_counter()
+                rep = session.run(g, timeout=120.0)
+                samples[mode].append(time.perf_counter() - t0)
+                assert len(acc) == n_tasks
+                sums[mode] = sum(acc)
+                if mode == "resources":
+                    waits = int(rep.stats.get("resource_waits", 0))
+                    acquires = int(rep.stats.get("resource_acquires", 0))
+    edges_best = min(samples["edges"])
+    res_best = min(samples["resources"])
+    return {
+        "bench": "resource_contention", "workers": workers, "tasks": n_tasks,
+        "edges_ms": round(edges_best * 1e3, 3),
+        "resources_ms": round(res_best * 1e3, 3),
+        "speedup": round(edges_best / res_best, 3),
+        "resource_acquires": acquires,
+        "resource_waits": waits,
+        # same accumulator contents either way (order differs by design)
+        "identical": bool(sums["edges"] == sums["resources"]),
+        "no_slower": bool(res_best <= edges_best * 1.25),
+        "noise": _spread(samples["resources"]),
+    }
+
+
 def write_json(rows: List[Dict], path: str = JSON_PATH) -> None:
     out = {
         "bench": "runtime",
@@ -460,8 +539,11 @@ def main():
     print()
     async_rows = [bench_async_overlap(w) for w in WORKERS]
     emit(async_rows)
+    print()
+    resource_rows = [bench_resources(w) for w in FRAME_WORKERS]
+    emit(resource_rows)
     write_json(overlap_rows + reuse_rows + trace_rows + frame_rows
-               + victim_rows + compiled_rows + async_rows)
+               + victim_rows + compiled_rows + async_rows + resource_rows)
     print(f"# wrote {JSON_PATH}")
 
 

@@ -8,9 +8,10 @@ themselves guarded:
 * **wellformed** — every bench JSON artifact has its expected ``bench``
   name and non-empty rows; every row honoring an ``identical`` /
   ``no_slower`` contract actually honors it; ``BENCH_runtime.json`` must
-  carry ``suspend_frames``, ``victim_frames``, ``compiled_linalg`` and
-  ``async_overlap`` rows (and per-row noise spreads, the perf gate's
-  food); ``BENCH_serving.json`` must carry ``serving_poisson``
+  carry ``suspend_frames``, ``victim_frames``, ``compiled_linalg``,
+  ``async_overlap`` and ``resource_contention`` rows (the latter with
+  the full resource column set, and per-row noise spreads, the perf
+  gate's food); ``BENCH_serving.json`` must carry ``serving_poisson``
   continuous-batching rows with the full latency/throughput column set,
   ``serving_compiled`` rows (including workers=4, the dispatch-collapse
   count) with the full compiled column set, plus ``serving_procs``
@@ -62,6 +63,15 @@ PROCS_COLUMNS = (
     "speedup", "warm_hit_rate", "identical", "noise",
 )
 
+#: columns every resource-contention runtime row must report (the perf
+#: gate consumes resources_ms/edges_ms; ``identical`` certifies the two
+#: serializations produced the same accumulator contents, and the
+#: acquire/wait counters certify the arbiter actually arbitrated)
+RESOURCE_COLUMNS = (
+    "workers", "tasks", "edges_ms", "resources_ms", "speedup",
+    "resource_acquires", "resource_waits", "identical", "noise",
+)
+
 
 class ArtifactError(AssertionError):
     """A bench artifact broke one of the pipeline's contracts."""
@@ -104,6 +114,21 @@ def check_rows(path: str, out: Dict, bench: str) -> None:
             raise ArtifactError(f"{path}: missing compiled_linalg rows")
         if not any(r["bench"] == "async_overlap" for r in rows):
             raise ArtifactError(f"{path}: missing async_overlap rows")
+        contention = [r for r in rows if r["bench"] == "resource_contention"]
+        if not contention:
+            raise ArtifactError(
+                f"{path}: missing resource_contention (declarative mutual "
+                "exclusion vs edge serialization) rows")
+        for row in contention:
+            missing = [c for c in RESOURCE_COLUMNS if c not in row]
+            if missing:
+                raise ArtifactError(
+                    f"{path}: resource_contention row missing {missing}: "
+                    f"{row}")
+            if row["resource_acquires"] < row["tasks"]:
+                raise ArtifactError(
+                    f"{path}: resource_contention row acquired the "
+                    f"accumulator fewer times than it has updates: {row}")
         for row in rows:
             if "noise" not in row:
                 raise ArtifactError(

@@ -83,6 +83,11 @@ CONTRACTS: Dict[str, Tuple[str, str]] = {
     # async Session.submit pipelining must be no slower than the same
     # graph stream awaited serially
     "async_overlap": ("overlap_ms", "serial_ms"),
+    # declarative mutual exclusion (one shared resource, no cross-edges)
+    # must be no slower than serializing the same updates with a chain of
+    # dependency edges — conflicts-without-dependencies never lose to
+    # fake ordering
+    "resource_contention": ("resources_ms", "edges_ms"),
 }
 
 

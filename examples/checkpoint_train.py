@@ -1,0 +1,94 @@
+"""Resource-guarded concurrent checkpointing in a toy training loop.
+
+Each "train step" produces N shard payloads in parallel; N writer tasks
+then append the shards to a :class:`~repro.checkpoint.CheckpointSink`.
+The writers share ONE exclusive checkpoint-file resource and have **no
+edges between them**: the arbiter serializes the writes in whatever order
+the shards finish, while shard serialization still overlaps across
+workers.  Edge-serializing the writers instead would also pin their order
+— the resource pins neither (conflicts without dependencies).
+
+Every step builds the same graph shape, so with ``--scheduler replay``
+step 1 records (including the resource grant order) and later steps replay
+it bit-identically — the manifests' ``write_log`` stops varying.
+
+``--crash`` makes one writer die between ``begin_shard`` and
+``commit_shard``: the run aborts with the checkpoint torn, the arbiter
+provably drops the dead writer's file grant, and the retry step acquires
+it cleanly.
+
+Run:  PYTHONPATH=src python examples/checkpoint_train.py
+      PYTHONPATH=src python examples/checkpoint_train.py --scheduler replay
+      PYTHONPATH=src python examples/checkpoint_train.py --crash
+"""
+
+import argparse
+import tempfile
+import time
+
+from repro.api import Graph, Session
+from repro.checkpoint import (CheckpointSink, add_checkpoint_tasks,
+                              checkpoint_resource)
+from repro.replay import GraphCache
+
+
+def build_step_graph(sink, step, n_shards, *, crash_on=None):
+    """Same shape every step => one recording serves the whole loop."""
+    g = Graph(f"ckpt_step[{n_shards}]")
+    ckpt_file = checkpoint_resource()
+    shard_out = [None] * n_shards        # train -> writer handoff, per shard
+
+    def train(s, step=step):
+        def fn(ctx):
+            time.sleep(0.002 * (s % 3 + 1))      # skewed shard compute
+            shard_out[s] = {"step": step, "shard": s,
+                            "weights": [step * 10 + s]}
+            return s
+        return fn
+
+    produced = [g.add(train(s), name=f"train{s}", cost=1.0)
+                for s in range(n_shards)]
+    add_checkpoint_tasks(
+        g, sink, list(range(n_shards)),
+        resource=ckpt_file,
+        serialize=lambda s, _: shard_out[s],   # ordered by the dep edge
+        deps=[[h] for h in produced],
+        crash_on=crash_on)
+    return g
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--scheduler", choices=("dynamic", "replay"),
+                    default="dynamic")
+    ap.add_argument("--crash", action="store_true",
+                    help="kill one writer mid-write on step 1, then retry")
+    args = ap.parse_args()
+
+    cache = GraphCache(tempfile.mkdtemp(prefix="ckpt_cache_")) \
+        if args.scheduler == "replay" else None
+    with Session(workers=args.workers, scheduler=args.scheduler,
+                 cache=cache) as session:
+        for step in range(args.steps):
+            crash = args.crash and step == 1
+            sink = CheckpointSink(args.shards)
+            g = build_step_graph(sink, step, args.shards,
+                                 crash_on=0 if crash else None)
+            try:
+                rep = session.run(g)
+            except Exception as e:
+                print(f"step {step}: ABORTED mid-write ({e}); "
+                      f"torn={sink.torn} — retrying with a fresh sink")
+                sink = CheckpointSink(args.shards)
+                rep = session.run(build_step_graph(sink, step, args.shards))
+            sink.finalize()
+            res = {k: v for k, v in rep.stats.items() if "resource" in k}
+            print(f"step {step}: write_log={sink.write_log} "
+                  f"complete={sink.complete} stats={res}")
+
+
+if __name__ == "__main__":
+    main()

@@ -160,6 +160,8 @@ class Graph(TaskGraph):
         cost: float = 1.0,
         priority: int = 0,
         parallel: Optional[ParallelSpec] = None,
+        uses: Sequence[Any] = (),
+        uses_shared: Sequence[Any] = (),
         **meta: Any,
     ) -> TaskHandle:
         """Add a task; returns its :class:`TaskHandle`.
@@ -173,6 +175,11 @@ class Graph(TaskGraph):
         handles, :class:`~repro.core.taskgraph.Task` objects or raw tids
         and is kept *in front of* the inferred edges (explicit ordering
         intent first).
+
+        ``uses`` / ``uses_shared`` declare
+        :class:`~repro.resources.Resource` conflicts (exclusive / shared):
+        tasks sharing a resource are mutually excluded at run time without
+        any ordering edge between them.
         """
         inferred: List[TaskHandle] = []
         _collect_handles(args, inferred)
@@ -188,7 +195,7 @@ class Graph(TaskGraph):
         task = TaskGraph.add(
             self, self._compile_body(fn, args), deps=dep_ids, name=name,
             kind=kind, cost=cost, priority=priority, parallel=parallel,
-            **meta)
+            uses=uses, uses_shared=uses_shared, **meta)
         return TaskHandle(self, task)
 
     def handle(self, task_or_tid: Any) -> TaskHandle:

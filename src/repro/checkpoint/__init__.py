@@ -1,3 +1,10 @@
 from .checkpointer import Checkpointer
+from .tasks import (
+    CheckpointSink,
+    TornWriteError,
+    add_checkpoint_tasks,
+    checkpoint_resource,
+)
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointSink", "TornWriteError",
+           "add_checkpoint_tasks", "checkpoint_resource"]

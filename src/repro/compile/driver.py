@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from types import GeneratorType
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -45,6 +46,7 @@ from ..core.taskgraph import (
     YieldRequest,
 )
 from ..replay.graph_key import graph_key
+from ..resources.arbiter import grants_by_resource, task_needs
 from .plan import CompiledPlan
 
 __all__ = ["CompiledExecutor", "CompiledRunError"]
@@ -173,6 +175,33 @@ class CompiledExecutor:
         skip_ahead = 0
         perf = time.perf_counter
 
+        # resource grant discipline: skip-ahead may not reorder conflicting
+        # tasks, so a declaring task runs only at the head of its derived
+        # per-resource grant queues; each start appends to the grant log,
+        # compared per resource against the recording after the run.
+        needs_map = {t.tid: task_needs(tg, t.tid) for t in tasks
+                     if getattr(t, "uses", ()) or getattr(t, "uses_shared", ())}
+        rqueues = {r: deque(tids) for r, tids in grants_by_resource(
+            tg, self.plan.recording.resource_grants).items()} if needs_map else {}
+        grant_log: List[int] = []
+
+        def grant_turn(tids) -> bool:
+            for tid in tids:
+                for r, _ in needs_map.get(tid, ()):
+                    q = rqueues[r]
+                    if q and q[0] != tid:
+                        return False
+            return True
+
+        def log_grants(tids) -> None:
+            for tid in tids:
+                if tid in needs_map:
+                    for r, _ in needs_map[tid]:
+                        q = rqueues[r]
+                        if q and q[0] == tid:
+                            q.popleft()
+                    grant_log.append(tid)
+
         remaining: List[Tuple[Any, ...]] = list(self.plan.program)
         t_start = perf()
         while remaining:
@@ -183,6 +212,9 @@ class CompiledExecutor:
                     seg = entry[1]
                     if not seg.ext_deps.issubset(completed):
                         continue
+                    if needs_map and not grant_turn(seg.tids):
+                        continue
+                    log_grants(seg.tids)
                     t0 = perf()
                     seg(state, results)
                     body_s += perf() - t0
@@ -192,6 +224,9 @@ class CompiledExecutor:
                     task = tasks[tid]
                     if any(d not in completed for d in task.deps):
                         continue
+                    if needs_map and not grant_turn((tid,)):
+                        continue
+                    log_grants((tid,))
                     t0 = perf()
                     done = self._start_task(tg, task, results, frames, adapter)
                     body_s += perf() - t0
@@ -227,6 +262,13 @@ class CompiledExecutor:
             raise CompiledRunError(
                 f"compiled run left {len(frames)} frame(s) parked on "
                 f"{tg.name!r}: {sorted(frames)!r}")
+        if needs_map:
+            want = grants_by_resource(tg, self.plan.recording.resource_grants)
+            got = grants_by_resource(tg, grant_log)
+            if got != want:
+                raise CompiledRunError(
+                    f"compiled run diverged from the recorded resource grant "
+                    f"order on {tg.name!r}: got {got!r}, recorded {want!r}")
         self.stats = {
             "wall_s": wall_s,
             "body_s": body_s,
@@ -237,6 +279,7 @@ class CompiledExecutor:
             "opaque_tasks": self.plan.meta.n_opaque,
             "resumes": self.plan.meta.n_resumes,
             "skip_ahead": skip_ahead,
+            "resource_grants": len(grant_log),
         }
         return results
 

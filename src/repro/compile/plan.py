@@ -25,10 +25,12 @@ for the barrier protocol) when the spawn task executes.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.taskgraph import FrameResume, TaskGraph
 from ..replay.recording import Recording
+from ..resources.arbiter import grants_by_resource, task_needs
 from .fuse import FuseSpec, FusedSegment, fuse_spec_of
 
 __all__ = ["CompiledPlan", "CompiledPlanMeta", "compile_recording", "CompileError"]
@@ -91,6 +93,21 @@ def compile_recording(graph: TaskGraph, recording: Recording, *,
     tasks = graph.tasks
     dep_map = {t.tid: t.deps for t in tasks}
     last_seg = _last_segments(recording)
+    # resource gating: the merged serial order must reproduce the recorded
+    # per-resource grant order (conflicting tasks have no edges between
+    # them, so dependency gating alone could invert it).  A declaring task
+    # is emittable only at the head of every relevant derived grant queue.
+    # *Contended* resources (>= 2 declaring tasks) additionally cut the
+    # fuse so each contended task is trackable in the executor's grant log;
+    # a sole-user resource needs neither a cut nor gating beyond its queue.
+    needs_map: Dict[int, Tuple[Tuple[int, bool], ...]] = {
+        t.tid: task_needs(graph, t.tid) for t in tasks
+        if getattr(t, "uses", ()) or getattr(t, "uses_shared", ())}
+    rqueues: Dict[int, "deque"] = {
+        r: deque(tids)
+        for r, tids in grants_by_resource(
+            graph, recording.resource_grants).items()}
+    contended = {r for r, q in rqueues.items() if len(q) >= 2}
     orders = [list(w) for w in recording.worker_orders]
     n_workers = len(orders)
     cursors = [0] * n_workers
@@ -141,8 +158,19 @@ def compile_recording(graph: TaskGraph, recording: Recording, *,
                     tid = int(entry)
                     if any(d not in emitted_done for d in dep_map.get(tid, ())):
                         break
+                    needs = needs_map.get(tid)
+                    if needs is not None and any(
+                            rqueues[r] and rqueues[r][0] != tid
+                            for r, _ in needs):
+                        break           # not this task's recorded grant turn
                     task = tasks[tid]
                     spec = fuse_spec_of(task)
+                    if needs is not None:
+                        for r, _ in needs:
+                            if rqueues[r] and rqueues[r][0] == tid:
+                                rqueues[r].popleft()
+                        if any(r in contended for r, _ in needs):
+                            cut("resource")
                     if spec is not None:
                         if pending_fuse and pending_worker != w:
                             cut("worker_switch")

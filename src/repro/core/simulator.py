@@ -178,6 +178,21 @@ class Simulator:
         self.gang_state = self.gang_states[0]  # back-compat alias (ranks=1)
         self.indeg = graph.indegrees()
         self.remaining = len(graph)
+        # declarative resources: virtual holder counters + a FIFO of
+        # deferred (task, worker, defer_t) waiters.  A deferred task costs
+        # the *task* time, not the worker (the worker moves on — the
+        # arbiter's work-conserving contract); the wait surfaces in the
+        # trace as a barrier-kind span labelled "res:<task>".
+        from ..resources.arbiter import task_needs
+        self._res_needs = {
+            t.tid: task_needs(graph, t.tid) for t in graph.tasks
+            if getattr(t, "uses", ()) or getattr(t, "uses_shared", ())}
+        n_res = len(getattr(graph, "resources", ()))
+        self._res_excl = [0] * n_res
+        self._res_shared = [0] * n_res
+        self._res_caps = [r.capacity for r in getattr(graph, "resources", ())]
+        self._res_held: Dict[int, Any] = {}
+        self._res_wait: List[Tuple[Task, int, float]] = []
         # gang reservations in fork order: (spawn_tid, gang_id, workers, t)
         # — consumed by ListScheduler to synthesize replayable placements
         self.gang_log: List[Tuple[int, int, List[int], float]] = []
@@ -318,8 +333,69 @@ class Simulator:
                 f"simulation stalled at t={now:.6f} with {self.remaining} tasks unfinished"
             )
 
+    # -- declarative resources -------------------------------------------
+    def _res_available(self, needs) -> bool:
+        for rindex, shared in needs:
+            if shared:
+                if self._res_excl[rindex] > 0:
+                    return False
+            elif (self._res_shared[rindex] > 0
+                    or self._res_excl[rindex] >= self._res_caps[rindex]):
+                return False
+        return True
+
+    def _res_grant(self, tid: int, needs) -> None:
+        for rindex, shared in needs:
+            if shared:
+                self._res_shared[rindex] += 1
+            else:
+                self._res_excl[rindex] += 1
+        self._res_held[tid] = needs
+
+    def _res_release(self, task: Task, t: float) -> None:
+        """Free a completing holder's resources and grant deferred waiters
+        in FIFO order (a blocked earlier waiter shadows later overlapping
+        ones — the arbiter's fairness rule), re-queueing each granted task
+        on its deferring worker."""
+        needs = self._res_held.pop(task.tid, None)
+        if needs is None:
+            return
+        for rindex, shared in needs:
+            if shared:
+                self._res_shared[rindex] -= 1
+            else:
+                self._res_excl[rindex] -= 1
+        if not self._res_wait:
+            return
+        shadow: set = set()
+        still: List[Tuple[Task, int, float]] = []
+        for waiter, wid, t0 in self._res_wait:
+            wneeds = self._res_needs[waiter.tid]
+            if (not any(r in shadow for r, _ in wneeds)
+                    and self._res_available(wneeds)):
+                self._res_grant(waiter.tid, wneeds)
+                self._record(wid, t0, t, KIND_BARRIER, f"res:{waiter.name}")
+                self.workers[wid].local.append(waiter)
+                self._event(t, ("w", wid))
+            else:
+                still.append((waiter, wid, t0))
+                shadow.update(r for r, _ in wneeds)
+        self._res_wait = still
+
     # -- graph tasks ------------------------------------------------------
     def _run_task(self, w: _Worker, task: Task, now: float) -> None:
+        needs = self._res_needs.get(task.tid)
+        if needs is not None and task.tid not in self._res_held:
+            mine = {r for r, _ in needs}
+            overtakes = any(         # FIFO fairness: no overtaking an
+                r in mine            # earlier waiter on a shared resource
+                for wt, _, _ in self._res_wait
+                for r, _ in self._res_needs[wt.tid])
+            if overtakes or not self._res_available(needs):
+                self._res_wait.append((task, w.wid, now))
+                self._event(now, ("w", w.wid))   # worker stays work-conserving
+                return
+            self._res_grant(task.tid, needs)
         dur = task.cost
         if self.mode == "oversubscribe" and w.co_resident > 0:
             dur = dur * (1 + w.co_resident) + self.ctx_switch * w.co_resident
@@ -343,6 +419,7 @@ class Simulator:
 
     def _complete_task(self, w: _Worker, task: Task, t: float) -> None:
         self.remaining -= 1
+        self._res_release(task, t)
         my_rank = w.wid // self.rank_width
         for s in self.graph.successors(task):
             self.indeg[s.tid] -= 1

@@ -41,6 +41,8 @@ import weakref
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from ..resources.handle import Resource
+
 
 # ---------------------------------------------------------------------------
 # communication primitives + suspendable frames
@@ -650,6 +652,11 @@ class Task:
     priority: int = 0
     parallel: Optional[ParallelSpec] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # declarative conflicts (QuickSched): resources this task must hold for
+    # its whole execution — exclusively (``uses``) or reader-shared
+    # (``uses_shared``).  No ordering is implied; the arbiter picks one.
+    uses: Tuple[Resource, ...] = ()
+    uses_shared: Tuple[Resource, ...] = ()
 
     def __hash__(self) -> int:  # identity by tid within a graph
         return hash(self.tid)
@@ -784,6 +791,10 @@ class TaskGraph:
         self.name = name
         self.tasks: List[Task] = []
         self._succ: Dict[int, List[int]] = {}
+        # declared resources in first-use order; recordings and the flight
+        # recorder refer to them by index in this list (the "rindex")
+        self.resources: List[Resource] = []
+        self._resource_index: Dict[int, int] = {}   # id(resource) -> rindex
 
     # -- construction -----------------------------------------------------
     def add(
@@ -796,6 +807,8 @@ class TaskGraph:
         cost: float = 1.0,
         priority: int = 0,
         parallel: Optional[ParallelSpec] = None,
+        uses: Sequence[Resource] = (),
+        uses_shared: Sequence[Resource] = (),
         **meta: Any,
     ) -> Task:
         tid = len(self.tasks)
@@ -803,6 +816,11 @@ class TaskGraph:
         for d in dep_ids:
             if d >= tid or d < 0:
                 raise ValueError(f"dependency {d} of task {tid} is not an existing task")
+        for r in tuple(uses) + tuple(uses_shared):
+            if not isinstance(r, Resource):
+                raise TypeError(
+                    f"uses/uses_shared entries must be Resource, got {r!r}")
+            self.register_resource(r)
         t = Task(
             tid=tid,
             name=name or f"{kind}:{tid}",
@@ -813,12 +831,28 @@ class TaskGraph:
             priority=priority,
             parallel=parallel,
             meta=dict(meta),
+            uses=tuple(uses),
+            uses_shared=tuple(uses_shared),
         )
         self.tasks.append(t)
         self._succ[tid] = []
         for d in dep_ids:
             self._succ[d].append(tid)
         return t
+
+    def register_resource(self, resource: Resource) -> int:
+        """Intern ``resource`` into this graph's rindex space (idempotent;
+        identity-keyed — two same-named handles are two resources)."""
+        rindex = self._resource_index.get(id(resource))
+        if rindex is None:
+            rindex = len(self.resources)
+            self._resource_index[id(resource)] = rindex
+            self.resources.append(resource)
+        return rindex
+
+    def resource_index(self) -> Dict[int, int]:
+        """id(resource) -> rindex for every declared resource."""
+        return self._resource_index
 
     # -- queries ----------------------------------------------------------
     def __len__(self) -> int:

@@ -61,6 +61,9 @@ EV_REPLAY_FALLBACK = "replay_fallback"  # a=tid or -1        label=unit kind
 EV_REPLAY_STALL = "replay_stall"
 EV_REPLAY_SKIP = "replay_skip"        # a=tid
 EV_RUN_AHEAD = "run_ahead"            # a=tid
+EV_RESOURCE_ACQUIRE = "resource_acquire"  # a=tid, b=n_res   label=task name
+EV_RESOURCE_WAIT = "resource_wait"    # a=tid (task deferred on contention)
+EV_RESOURCE_RELEASE = "resource_release"  # a=tid, b=n_res
 
 EVENT_KINDS = frozenset({
     EV_TASK_START, EV_TASK_END, EV_STEAL_ATTEMPT, EV_STEAL_HIT,
@@ -68,6 +71,7 @@ EVENT_KINDS = frozenset({
     EV_BARRIER_DONE, EV_FRAME_SUSPEND, EV_FRAME_WAKE, EV_FRAME_RESUME,
     EV_BLOCK, EV_UNBLOCK, EV_DEADLOCK_POLL, EV_PARK, EV_WAKE,
     EV_REPLAY_FALLBACK, EV_REPLAY_STALL, EV_REPLAY_SKIP, EV_RUN_AHEAD,
+    EV_RESOURCE_ACQUIRE, EV_RESOURCE_WAIT, EV_RESOURCE_RELEASE,
 })
 
 

@@ -70,6 +70,9 @@ from ..core.tracing import (
     EV_GANG_EXIT,
     EV_GANG_RESERVE,
     EV_PARK,
+    EV_RESOURCE_ACQUIRE,
+    EV_RESOURCE_RELEASE,
+    EV_RESOURCE_WAIT,
     EV_STEAL_ATTEMPT,
     EV_STEAL_HIT,
     EV_TASK_END,
@@ -77,6 +80,7 @@ from ..core.tracing import (
     EV_WAKE,
 )
 from ..obs.recorder import NULL_RECORDER, FlightRecorder
+from ..resources.arbiter import ResourceArbiter
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
 
@@ -170,6 +174,9 @@ class DynamicDispatch(DispatchStrategy):
         # the recorded choice, making selects deterministic)
         self._rec_wait_choices: Dict[Tuple[int, int], int] = {}
 
+        # conflict-aware resource grants (declarative `uses=`; ROADMAP 3)
+        self.arbiter = ResourceArbiter()
+
         # always-on lightweight run counters (surfaced in RunReport.stats)
         self.run_stats: Dict[str, int] = {
             "steals": 0, "steal_attempts": 0, "frame_suspends": 0}
@@ -195,7 +202,11 @@ class DynamicDispatch(DispatchStrategy):
                     self.gang_state.release_gang_thread(w)
             dq.clear()
         # frames of an aborted run: cancel parked ones, close resumed-but-
-        # never-rerun ones (the orphaned-frame leak check covers both)
+        # never-rerun ones (the orphaned-frame leak check covers both).
+        # Stale arbiter waiters are discarded first: their suspension
+        # accounting died with the old run's state and must not touch the
+        # fresh run's counters.
+        self.arbiter.abort()
         self.drain_frames()
         for w, dq in enumerate(self._resume_deqs):
             with self._resume_locks[w]:
@@ -215,7 +226,9 @@ class DynamicDispatch(DispatchStrategy):
             self._rec_comms = []
             self._rec_wait_choices = {}
         self.run_stats = {"steals": 0, "steal_attempts": 0,
-                          "frame_suspends": 0}
+                          "frame_suspends": 0, "resource_acquires": 0,
+                          "resource_waits": 0, "resource_releases": 0}
+        self.arbiter.begin(graph)
         self.recorder.begin_run()
         # master thread (worker 0's queue) receives the roots
         for t in graph.roots():
@@ -332,7 +345,19 @@ class DynamicDispatch(DispatchStrategy):
     def _steal_local(self, victim: int) -> Optional[Task]:
         with self._local_locks[victim]:
             dq = self._locals[victim]
-            return dq.popleft() if dq else None
+            if not dq:
+                return None
+            if not self.arbiter.active:
+                return dq.popleft()
+            # conflict-aware: don't burn the steal on a task whose resources
+            # are currently held — it would only bounce into the arbiter's
+            # wait list (bounded FIFO-end scan, mirrors the priority pop)
+            for i in range(min(len(dq), 8)):
+                if not self.arbiter.would_defer(dq[i].tid):
+                    t = dq[i]
+                    del dq[i]
+                    return t
+            return None
 
     def _pop_resume(self, victim: int) -> Optional[TaskFrame]:
         with self._resume_locks[victim]:
@@ -420,6 +445,22 @@ class DynamicDispatch(DispatchStrategy):
         self._depth[w] -= 1
 
     def _run_task(self, w: int, task: Task) -> None:
+        arbiter = self.arbiter
+        if arbiter.active and arbiter.needs(task.tid):
+            if arbiter.holds(task.tid):
+                pass        # pre-granted by a releaser's FIFO scan
+            elif arbiter.try_acquire(task.tid):
+                self.run_stats["resource_acquires"] += 1
+                self.recorder.emit_resource(w, EV_RESOURCE_ACQUIRE, task,
+                                            len(arbiter.needs(task.tid)))
+            else:
+                # contended: the task now sits on the arbiter's FIFO wait
+                # list (soft-blocked, like a suspended frame — the worker
+                # moves on); release() re-queues it when granted
+                self.run_stats["resource_waits"] += 1
+                self.recorder.emit_resource(w, EV_RESOURCE_WAIT, task)
+                self.core.note_frame_suspended()
+                return
         self.recorder.emit_task_start(w, task)
         if self._recording:
             # per-worker list, appended only by worker w: start order, no lock
@@ -561,8 +602,30 @@ class DynamicDispatch(DispatchStrategy):
             frames = list(self._suspended.values())
         for frame in frames:
             self._discard_parked(frame)
+        # resource grants die with the run: drop every holder and rebalance
+        # the suspension accounting of tasks still deferred on the arbiter
+        # (the release-on-abort contract the checkpoint writers rely on)
+        for _tid in self.arbiter.abort():
+            self.core.note_frame_resumed()
 
     def _complete(self, w: int, task: Task) -> None:
+        arbiter = self.arbiter
+        if arbiter.active and arbiter.holds(task.tid):
+            n_res = len(arbiter.needs(task.tid))
+            granted = arbiter.release(task.tid)
+            self.run_stats["resource_releases"] += 1
+            self.recorder.emit_resource(w, EV_RESOURCE_RELEASE, task, n_res)
+            for tid in granted:
+                # granted at release time (FIFO-fair): hand the task back to
+                # the releasing worker's queue, already holding its grants
+                t = self._graph.tasks[tid]
+                self.run_stats["resource_acquires"] += 1
+                self.recorder.emit_resource(w, EV_RESOURCE_ACQUIRE, t,
+                                            len(arbiter.needs(tid)))
+                self.core.note_frame_resumed()
+                self._push_local(w, t)
+            if granted:
+                self._notify_work()
         newly_ready: List[Task] = []
         with self._indeg_lock:
             for s in self._graph.successors(task):
@@ -800,5 +863,6 @@ class DynamicDispatch(DispatchStrategy):
             steals=steals,
             collective_order=list(self._rec_comms),
             wait_choices=dict(self._rec_wait_choices),
+            resource_grants=self.arbiter.grant_log(),
             source="dynamic",
         )

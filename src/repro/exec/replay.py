@@ -81,12 +81,16 @@ from ..core.tracing import (
     EV_REPLAY_FALLBACK,
     EV_REPLAY_SKIP,
     EV_REPLAY_STALL,
+    EV_RESOURCE_ACQUIRE,
+    EV_RESOURCE_RELEASE,
+    EV_RESOURCE_WAIT,
     EV_RUN_AHEAD,
     EV_TASK_END,
     EV_UNBLOCK,
     EV_WAKE,
 )
 from ..obs.recorder import NULL_RECORDER, FlightRecorder
+from ..resources.arbiter import ResourceArbiter
 from .core import DispatchStrategy, ExecutorCore, GangRegion
 
 if TYPE_CHECKING:  # avoid a circular import at load time (exec <-> replay)
@@ -159,6 +163,11 @@ class ReplayDispatch(DispatchStrategy):
         self._depth = [0] * n
         self._stalled = [False] * n
 
+        # resource arbiter in *pinned* mode: the recorded grant order is
+        # replayed bit-identically (a declaring task runs only when it is
+        # head of every relevant recorded per-resource grant queue)
+        self.arbiter = ResourceArbiter()
+
         self.stats: Dict[str, int] = {}
         self.issued_gang_ids: List[int] = []
 
@@ -190,8 +199,14 @@ class ReplayDispatch(DispatchStrategy):
         self._depth = [0] * self.n_workers
         self._stalled = [False] * self.n_workers
         self.stats = {"fallback_steals": 0, "stalls": 0, "skips": 0,
-                      "run_ahead": 0, "frame_suspends": 0}
+                      "run_ahead": 0, "frame_suspends": 0,
+                      "resource_acquires": 0, "resource_waits": 0,
+                      "resource_releases": 0}
         self.issued_gang_ids = []
+        # pre-validation recordings may lack a grant order; fall back to
+        # dynamic arbitration then (still mutually exclusive, not pinned)
+        grants = list(getattr(self.recording, "resource_grants", ()) or ())
+        self.arbiter.begin(graph, pinned_order=grants or None)
         self.recorder.begin_run()
 
     @property
@@ -306,7 +321,8 @@ class ReplayDispatch(DispatchStrategy):
             if not isinstance(e, int):
                 continue
             if (self._ready[e] and e not in self._claims
-                    and e not in self._placements):
+                    and e not in self._placements
+                    and self.arbiter.runnable_now(e)):
                 if self._claims.setdefault(e, w) != w:
                     continue
                 self.recorder.emit(w, EV_RUN_AHEAD, "", e)
@@ -319,7 +335,8 @@ class ReplayDispatch(DispatchStrategy):
         """Cheap re-check under the worker cv (pairs with notify ordering:
         state is written before the cv is taken, so no wakeup is missed)."""
         if isinstance(entry, int):
-            return self._ready[entry] or entry in self._claims
+            return ((self._ready[entry] and self.arbiter.runnable_now(entry))
+                    or entry in self._claims)
         if isinstance(entry, FrameResume):
             if self._done[entry.tid] or (entry.tid, entry.seg) in self._claims:
                 return True
@@ -339,6 +356,8 @@ class ReplayDispatch(DispatchStrategy):
             return True
         if not self._ready[tid]:
             return False
+        if not self.arbiter.runnable_now(tid):
+            return False     # not this task's recorded grant turn yet
         if self._claims.setdefault(tid, w) != w:
             return True
         self._execute(w, self._graph.tasks[tid])
@@ -412,6 +431,8 @@ class ReplayDispatch(DispatchStrategy):
             return True
         for tid in range(self._n_tasks):
             if self._ready[tid] and tid not in self._claims:
+                if not self.arbiter.runnable_now(tid):
+                    continue     # held elsewhere or not its grant turn
                 if tid in self._placements:
                     if self._owner.get(tid, w) != w:
                         continue
@@ -434,6 +455,23 @@ class ReplayDispatch(DispatchStrategy):
     # ------------------------------------------------------------------
     # execution
     def _execute(self, w: int, task: Task) -> None:
+        arbiter = self.arbiter
+        if arbiter.active and arbiter.needs(task.tid):
+            # Gated callers claim only after `runnable_now`, and a pinned
+            # head's availability can only improve (competitors sit behind
+            # it in the grant queues), so the first acquire succeeds; the
+            # loop covers the unpinned degraded mode, where contention
+            # defers us onto the FIFO until a release grants us in turn.
+            if not arbiter.try_acquire(task.tid):
+                self.stats["resource_waits"] += 1
+                self.recorder.emit_resource(w, EV_RESOURCE_WAIT, task)
+                while not arbiter.try_acquire(task.tid):
+                    if self.core.aborted:
+                        return
+                    time.sleep(0)
+            self.stats["resource_acquires"] += 1
+            self.recorder.emit_resource(w, EV_RESOURCE_ACQUIRE, task,
+                                        len(arbiter.needs(task.tid)))
         self.recorder.emit_task_start(w, task)
         ctx = TaskContext(self._graph, task, self._results, runtime=self)
         ctx.worker_id = w  # type: ignore[attr-defined]
@@ -560,6 +598,8 @@ class ReplayDispatch(DispatchStrategy):
             frames = list(self._parked.values())
         for frame in frames:
             self._discard_parked(frame)
+        # an aborted run must not leak grants into the next begin_run
+        self.arbiter.abort()
 
     # ------------------------------------------------------------------
     # plain-body blocking communication (mirrors DynamicDispatch semantics:
@@ -650,6 +690,20 @@ class ReplayDispatch(DispatchStrategy):
         return RuntimeTrace.from_recorder(self.recorder)
 
     def _complete(self, w: int, task: Task) -> None:
+        arbiter = self.arbiter
+        if arbiter.active and arbiter.holds(task.tid):
+            n_res = len(arbiter.needs(task.tid))
+            arbiter.release(task.tid)
+            self.stats["resource_releases"] += 1
+            self.recorder.emit_resource(w, EV_RESOURCE_RELEASE, task, n_res)
+            # nudge the recorded owner of each resource's next grantee
+            # (release-then-read pairs with the waiter's set-flag-then-check)
+            for nxt in arbiter.pinned_heads():
+                owner = self._owner.get(nxt, -1)
+                if 0 <= owner != w and self._waiting[owner]:
+                    cv = self._worker_cvs[owner]
+                    with cv:
+                        cv.notify()
         self._done[task.tid] = True
         dep_seen = self._dep_seen
         indeg = self._indeg

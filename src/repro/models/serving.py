@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional
 from ..api.graph import Graph
 from ..compile.fuse import FuseSpec
 from ..core.taskgraph import Channel, TaskGraph
+from ..resources import Resource
 
 # decode_fn(params, cache, tok) -> (new_cache, logits); sample_fn(logits) -> tok
 DecodeFn = Callable[[Any, Any, Any], Any]
@@ -100,18 +101,43 @@ class DecodeState:
         return jnp.concatenate(self.history, axis=1)
 
 
+def kv_page_resources(n_shards: int) -> List[Resource]:
+    """One exclusive KV-page :class:`~repro.resources.Resource` per decode
+    lane.  Resource identity in the graph digest is (name, capacity), so
+    rebuilding per step — even with fresh handles — keeps the digest stable
+    and the decode loop replayable."""
+    return [Resource(f"kv_page{s}") for s in range(n_shards)]
+
+
 def build_decode_graph(
     state: DecodeState,
     decode_fn: DecodeFn,
     sample_fn: Optional[SampleFn] = None,
+    *,
+    kv_pages: Optional[List[Resource]] = None,
+    maintenance_fn: Optional[Callable[["DecodeState"], Any]] = None,
 ) -> TaskGraph:
     """One decode step over ``state``: per shard ``decode -> sample``, plus a
     ``gather`` frame receiving each shard's token over a
     :class:`~repro.core.taskgraph.Channel` as it is sampled.  Rebuilding per
     step yields an identical :func:`~repro.replay.graph_key` digest, so a
     :class:`~repro.replay.ReplayPool` records step 1 (including the gather
-    frame's suspension points) and replays every later step."""
+    frame's suspension points) and replays every later step.
+
+    ``kv_pages`` (see :func:`kv_page_resources`) opts each lane's decode
+    task into an exclusive per-lane KV-page resource; ``maintenance_fn``
+    then adds a ``kv_maint`` task that takes *every* page exclusively with
+    no ordering edges at all — the arbiter serializes it against the decode
+    tasks wherever it lands, and the recorded grant order replays the same
+    placement bit-identically.  Without ``kv_pages`` the graph (and its
+    digest) is byte-identical to the resource-free form."""
     sample = sample_fn or greedy_sample
+    if kv_pages is not None and len(kv_pages) != state.n_shards:
+        raise ValueError(
+            f"kv_pages has {len(kv_pages)} entries for {state.n_shards} "
+            "shards")
+    if maintenance_fn is not None and kv_pages is None:
+        raise ValueError("maintenance_fn requires kv_pages")
     g = Graph(f"decode_step[{state.n_shards}]")
     g.fuse_state = _DecodeFuseState(state)
     tokens = Channel("decode.tokens")
@@ -126,6 +152,7 @@ def build_decode_graph(
         # caller-supplied (usually already jitted) and the compiled driver
         # must call it exactly as the dynamic body does for bit-identity.
         dec = g.add(_decode, name=f"decode{s}", kind="compute", cost=1.0,
+                    uses=[kv_pages[s]] if kv_pages is not None else (),
                     fuse=FuseSpec(decode_fn,
                                   (("params",), ("cache", s), ("tok", s)),
                                   (("cache", s), ("logits", s)),
@@ -158,6 +185,15 @@ def build_decode_graph(
         return state.step_tokens
 
     g.add(_gather, name="gather", kind="comm", cost=0.05)
+
+    if maintenance_fn is not None:
+        def _maint(ctx):
+            return maintenance_fn(state)
+
+        # conflicts-but-no-edges: the page resources are the ONLY thing
+        # keeping this compaction pass out of the decode tasks' way
+        g.add(_maint, name="kv_maint", kind="compute", cost=0.2,
+              uses=list(kv_pages))
     return g
 
 

@@ -98,6 +98,9 @@ class NullRecorder:
     def emit_frame_suspend(self, worker, frame, request):
         return None
 
+    def emit_resource(self, worker, kind, task, n_res=0):
+        return None
+
     def begin_run(self):
         return None
 
@@ -152,6 +155,11 @@ class FlightRecorder:
             label = f"{label}@c{uid}"     # channel/event identity
         self.emit(worker, EV_FRAME_SUSPEND, label, frame.task.tid,
                   frame.resumes + 1)
+
+    def emit_resource(self, worker, kind, task, n_res=0):
+        """Resource acquire/wait/release for ``task`` (kind is one of the
+        EV_RESOURCE_* constants; label building stays off the null path)."""
+        self.emit(worker, kind, task.name, task.tid, n_res)
 
     def begin_run(self):
         for ring in self.rings:

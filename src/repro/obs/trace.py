@@ -38,6 +38,9 @@ from ..core.tracing import (
     EV_REPLAY_FALLBACK,
     EV_REPLAY_SKIP,
     EV_REPLAY_STALL,
+    EV_RESOURCE_ACQUIRE,
+    EV_RESOURCE_RELEASE,
+    EV_RESOURCE_WAIT,
     EV_RUN_AHEAD,
     EV_STEAL_ATTEMPT,
     EV_STEAL_HIT,
@@ -71,6 +74,9 @@ _COUNTER_EVENTS = {
     "deadlock_polls": EV_DEADLOCK_POLL,
     "blocks": EV_BLOCK,
     "tasks": EV_TASK_END,
+    "resource_acquires": EV_RESOURCE_ACQUIRE,
+    "resource_waits": EV_RESOURCE_WAIT,
+    "resource_releases": EV_RESOURCE_RELEASE,
 }
 
 
@@ -104,6 +110,10 @@ class RuntimeTrace(Trace):
         #: frame resume segments executed per worker — the workers that
         #: host suspended continuations (frame-aware victim selection)
         self.frame_resumes_by_worker: Dict[int, int] = {}
+        #: (tid, t_deferred, t_granted) per resource-contended task — the
+        #: arbiter defer window (task time, not worker time: the deferring
+        #: worker moves on)
+        self.resource_waits: List[Tuple[int, float, float]] = []
         self._metrics_cache: Optional[Dict[str, Any]] = None
 
     # -- equality is exact: events, counters and flow edges round-trip ----
@@ -174,6 +184,12 @@ class RuntimeTrace(Trace):
             },
             "per_worker_idle_fraction": idle_frac,
             "barrier_wait_s": self.breakdown().get(KIND_BARRIER, 0.0),
+            "resource_waits": c.get("resource_waits", 0),
+            "resource_wait_s": sum(t1 - t0
+                                   for _, t0, t1 in self.resource_waits),
+            "resource_wait_fraction":
+                (sum(t1 - t0 for _, t0, t1 in self.resource_waits)
+                 / (mk * self.n_workers)) if mk else 0.0,
             "replay_fallback_rate": c.get("fallback_steals", 0) / n_tasks,
             "dispatch_overhead_fraction": self.dispatch_overhead_fraction(),
             "utilization": self.utilization(),
@@ -249,6 +265,8 @@ def assemble(snapshot: List[Tuple[int, float, str, str, int, int]],
     # frame flow matching: (tid, seg) -> pending suspend/wake timestamps
     suspends: Dict[Tuple[int, int], Tuple[int, float, str]] = {}
     wakes: Dict[Tuple[int, int], Tuple[int, float]] = {}
+    # resource wait matching: tid -> defer timestamp (closed by the grant)
+    res_pending: Dict[int, float] = {}
 
     per_worker: Dict[int, List[Tuple[float, str, str, int, int]]] = \
         defaultdict(list)
@@ -284,6 +302,14 @@ def assemble(snapshot: List[Tuple[int, float, str, str, int, int]],
                 rt.steal_flows.append((a, w, t, label))
             elif ev == EV_REPLAY_FALLBACK:
                 spans.append(Event(w, t, t, KIND_STEAL, f"fallback:{label}"))
+            elif ev == EV_RESOURCE_WAIT:
+                spans.append(Event(w, t, t, KIND_SWITCH, f"res-wait:{label}"))
+            elif ev == EV_RESOURCE_ACQUIRE:
+                spans.append(Event(w, t, t, KIND_SWITCH,
+                                   f"res-acquire:{label}"))
+            elif ev == EV_RESOURCE_RELEASE:
+                spans.append(Event(w, t, t, KIND_SWITCH,
+                                   f"res-release:{label}"))
         # close dangling units (aborted runs / ring truncation) at trace end
         while stack:
             _, k, lbl = stack.pop()
@@ -297,7 +323,13 @@ def assemble(snapshot: List[Tuple[int, float, str, str, int, int]],
         for cname, ckind in _COUNTER_EVENTS.items():
             if ev == ckind:
                 counters[cname] += 1
-        if ev == EV_STEAL_ATTEMPT:
+        if ev == EV_RESOURCE_WAIT:
+            res_pending[a] = t
+        elif ev == EV_RESOURCE_ACQUIRE:
+            t0 = res_pending.pop(a, None)
+            if t0 is not None:
+                rt.resource_waits.append((a, t0, t))
+        elif ev == EV_STEAL_ATTEMPT:
             victims.setdefault(a, [0, 0])[0] += 1
         elif ev == EV_STEAL_HIT:
             victims.setdefault(a, [0, 0])[1] += 1

@@ -62,6 +62,22 @@ def _canon_parallel(spec: Optional[ParallelSpec]) -> str:
     ))
 
 
+def _canon_resources(graph: TaskGraph, t) -> str:
+    """Resource declarations by structural identity: rindex (first-use
+    order), name and capacity — not the process-wide uid, so two builds of
+    the same graph over fresh handles share a key.  Empty for tasks with no
+    declarations, which keeps resource-free digests byte-identical to the
+    pre-resource format."""
+    if not t.uses and not t.uses_shared:
+        return ""
+    index = graph.resource_index()
+    def enc(r, tag):
+        return f"{tag}{index[id(r)]}:{r.name}:{r.capacity}"
+    parts = sorted(
+        [enc(r, "x") for r in t.uses] + [enc(r, "s") for r in t.uses_shared])
+    return ";" + ",".join(parts)
+
+
 def graph_key(graph: TaskGraph) -> GraphKey:
     """Compute the structural key of ``graph`` (O(tasks + edges))."""
     h = hashlib.sha256()
@@ -75,7 +91,7 @@ def graph_key(graph: TaskGraph) -> GraphKey:
             str(t.priority),
             ",".join(map(str, t.deps)),
             _canon_parallel(t.parallel),
-        ))
+        )) + _canon_resources(graph, t)
         h.update(line.encode())
         h.update(b"\n")
     return GraphKey(digest=h.hexdigest(), n_tasks=len(graph), name=graph.name)

@@ -64,6 +64,12 @@ class Recording:
     # (tid, seg) -> winning source index of a ctx.wait_any select resolved
     # at that resume segment; replay pins the recorded choice
     wait_choices: Dict[Tuple[int, int], int] = dataclasses.field(default_factory=dict)
+    # global resource-grant order: tids of resource-declaring tasks in the
+    # order the arbiter granted them (each exactly once — acquisition is
+    # all-or-nothing per task).  Replay derives per-resource queues from
+    # this and re-grants bit-identically; worker-slot independent, so
+    # remapping across worker counts preserves it verbatim.
+    resource_grants: List[int] = dataclasses.field(default_factory=list)
     source: str = "dynamic"                      # "dynamic" | "static"
 
     # ------------------------------------------------------------------
@@ -119,6 +125,19 @@ class Recording:
             raise RecordingError(
                 f"bad wait_any choices {bad_choices[:8]} (keys must be "
                 "in-range (tid, seg >= 1) with a non-negative winner index)")
+        declaring = {t.tid for t in graph.tasks if t.uses or t.uses_shared}
+        granted = list(self.resource_grants)
+        if declaring or granted:
+            counts: Dict[int, int] = {}
+            for tid in granted:
+                counts[tid] = counts.get(tid, 0) + 1
+            bad_grants = sorted(
+                (set(counts) ^ declaring)
+                | {t for t, c in counts.items() if c != 1})
+            if bad_grants:
+                raise RecordingError(
+                    f"resource_grants does not cover the graph's resource-"
+                    f"declaring tasks 1:1 (bad tids {bad_grants[:8]})")
 
     # ------------------------------------------------------------------
     # serialization (plain data; gang entries become 2-lists)
@@ -144,6 +163,7 @@ class Recording:
             "collective_order": list(self.collective_order),
             "wait_choices": [[tid, seg, idx] for (tid, seg), idx
                              in sorted(self.wait_choices.items())],
+            "resource_grants": list(self.resource_grants),
             "source": self.source,
         }
 
@@ -170,6 +190,7 @@ class Recording:
             collective_order=list(d.get("collective_order", [])),
             wait_choices={(int(c[0]), int(c[1])): int(c[2])
                           for c in d.get("wait_choices", [])},
+            resource_grants=[int(t) for t in d.get("resource_grants", [])],
             source=d.get("source", "dynamic"),
         )
 
@@ -255,6 +276,13 @@ class Recording:
         orders: List[List[Entry]] = [[] for _ in range(sched.n_slots)]
         for slot, _, _, entry in sorted(rows, key=lambda r: (r[0], r[1], r[2])):
             orders[slot].append(entry)
+        # synthesize the resource-grant order from the frozen start times
+        # (the simulator grants at task start; ties break by tid, matching
+        # its deterministic event order)
+        t0_of: Dict[int, float] = {it.tid: it.t0 for it in sched.items}
+        resource_grants = sorted(
+            (t.tid for t in graph.tasks if t.uses or t.uses_shared),
+            key=lambda tid: (t0_of.get(tid, place[tid][2]), tid))
         return cls(
             digest=key.digest,
             graph_name=graph.name,
@@ -264,5 +292,6 @@ class Recording:
             gang_placements=placements,
             gang_issue_order=issue_order,
             collective_order=sched.collective_order(),
+            resource_grants=resource_grants,
             source="static",
         )

@@ -124,9 +124,11 @@ def remap_recording(rec: Recording, new_workers: int) -> Recording:
         gang_issue_order=list(rec.gang_issue_order),
         steals=[],
         collective_order=list(rec.collective_order),
-        # wait_any winners are keyed by (tid, seg) — slot-independent, so
-        # the recorded deterministic choices survive the remap untouched
+        # wait_any winners are keyed by (tid, seg) and the resource-grant
+        # order is a tid sequence — both slot-independent, so the recorded
+        # deterministic choices survive the remap untouched
         wait_choices=dict(rec.wait_choices),
+        resource_grants=list(rec.resource_grants),
         source=f"remap[{old}->{new_workers}]:{rec.source}",
     )
 

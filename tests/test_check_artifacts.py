@@ -48,6 +48,17 @@ def _procs_row(**over):
     return row
 
 
+def _resource_row(**over):
+    row = {
+        "bench": "resource_contention", "workers": 2, "tasks": 8,
+        "edges_ms": 26.0, "resources_ms": 14.0, "speedup": 1.857,
+        "resource_acquires": 8, "resource_waits": 3,
+        "identical": True, "no_slower": True, "noise": 0.1,
+    }
+    row.update(over)
+    return row
+
+
 def _runtime_extra_rows():
     return [
         {"bench": "victim_frames", "workers": 2, "noise": 0.05,
@@ -56,6 +67,7 @@ def _runtime_extra_rows():
          "no_slower": True},
         {"bench": "async_overlap", "workers": 2, "noise": 0.1,
          "no_slower": True},
+        _resource_row(),
     ]
 
 
@@ -220,6 +232,31 @@ def test_wellformed_requires_async_overlap_rows(tmp_path):
     p = _write(tmp_path, "BENCH_runtime.json",
                {"bench": "runtime", "rows": rows})
     with pytest.raises(ArtifactError, match="async_overlap"):
+        check_wellformed([p])
+
+
+def test_wellformed_requires_resource_contention_rows_and_columns(tmp_path):
+    rows = [{"bench": "suspend_frames", "workers": 2, "noise": 0.1}] + [
+        r for r in _runtime_extra_rows()
+        if r["bench"] != "resource_contention"]
+    p = _write(tmp_path, "BENCH_runtime.json",
+               {"bench": "runtime", "rows": rows})
+    with pytest.raises(ArtifactError, match="resource_contention"):
+        check_wellformed([p])
+    row = _resource_row()
+    del row["edges_ms"]
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2, "noise": 0.1}]
+        + _runtime_extra_rows()[:-1] + [row]})
+    with pytest.raises(ArtifactError, match="edges_ms"):
+        check_wellformed([p])
+    p = _write(tmp_path, "BENCH_runtime.json", {
+        "bench": "runtime",
+        "rows": [{"bench": "suspend_frames", "workers": 2, "noise": 0.1}]
+        + _runtime_extra_rows()[:-1]
+        + [_resource_row(resource_acquires=3)]})
+    with pytest.raises(ArtifactError, match="fewer times"):
         check_wellformed([p])
 
 
